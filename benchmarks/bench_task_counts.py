@@ -1,0 +1,66 @@
+"""Paper Figs 3-4: multiplication-task counts per quadtree level.
+
+Empirical counts from coordinate lists vs the closed-form bounds
+(eqs (1)-(3), (8)-(12)).  CSV: pattern,level,count,bound.
+"""
+import numpy as np
+
+from repro.core import analysis as an
+from repro.core.patterns import (banded_pairs, divide_space_order,
+                                 overlap_pairs, particle_cloud, random_mask,
+                                 rmat_pairs)
+
+
+def main() -> None:
+    print("pattern,level,count,bound")
+
+    # Fig 3 left: random, L=10, ~65 nnz/row
+    L = 10
+    n = 1 << L
+    rows, cols = np.nonzero(random_mask(n, 65.0 / n, seed=0))
+    per = an.count_tasks_per_level_pairs(rows, cols, n)
+    for lvl in sorted(per):
+        bound = min(an.random_bound_low(lvl),
+                    an.random_bound_high(L, 65.0 / n, lvl))
+        print(f"random,{lvl},{per[lvl]},{bound:.0f}")
+    total = sum(per.values())
+    print(f"random,total,{total},{an.random_total_bound(n, 65.0 / n):.0f}")
+
+    # Fig 3 right: banded, d = 2^k
+    k = 5
+    d = 1 << k
+    rows, cols = banded_pairs(n, d)
+    per = an.count_tasks_per_level_pairs(rows, cols, n)
+    for lvl in sorted(per):
+        print(f"banded,{lvl},{per[lvl]},"
+              f"{an.banded_tasks_bound(L, k, lvl):.0f}")
+    print(f"banded,total,{sum(per.values())},"
+          f"{an.banded_total_bound(n, d):.0f}")
+
+    # Fig 4 left: overlap matrices for 1d/2d/3d particle clouds
+    for dim, n_per in ((1, 4096), (2, 64), (3, 16)):
+        coords = particle_cloud(n_per, dim, seed=1)
+        order = divide_space_order(coords)
+        rows, cols = overlap_pairs(coords, 4.0, order=order)
+        npart = len(coords)
+        g = 1 << int(np.ceil(np.log2(npart)))
+        per = an.count_tasks_per_level_pairs(rows, cols, g)
+        leaf = per[max(per)]
+        total = sum(per.values())
+        print(f"overlap{dim}d,leaf,{leaf},")
+        print(f"overlap{dim}d,total,{total},")
+        # locality: total within small factor of leaf count (paper §5.1)
+        assert total < 3.0 * leaf
+
+    # Fig 4 right: R-MAT locality sweep
+    for a in (0.25, 0.4, 0.6, 0.8, 0.95):
+        rows, cols = rmat_pairs(10, 5.0, a, seed=2)
+        per = an.count_tasks_per_level_pairs(rows, cols, 1 << 10)
+        leaf = per[max(per)]
+        total = sum(per.values())
+        print(f"rmat_a{a},leaf,{leaf},")
+        print(f"rmat_a{a},total,{total},")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,59 @@
+"""Paper Fig 9: weak scaling of banded multiply and symmetric square.
+
+ClusterSim virtual wall time for matrix dimension proportional to node
+count; the symmetric square should retain its ~2x advantage at every
+scale, and wall time should grow only polylog (eq (14)).
+CSV: op,nodes,N,wall_s,flops,speedup_vs_multiply.
+"""
+import numpy as np
+
+from repro.core import analysis as an
+from repro.core.patterns import banded_mask, values_for_mask
+from repro.core.quadtree import QTParams, qt_from_dense
+from repro.core.multiply import qt_multiply, qt_sym_square, total_flops
+from repro.core.tasks import ClusterSim, CTGraph
+
+
+def run(op, nodes, n_per, d, leaf_n, bs):
+    n = n_per * nodes
+    params = QTParams(n, leaf_n, bs)
+    a = values_for_mask(banded_mask(n, d), seed=1, symmetric=True)
+    g = CTGraph()
+    sim = ClusterSim(nodes, seed=0)
+    if op == "multiply":
+        ra = qt_from_dense(g, a, params)
+        rb = qt_from_dense(g, a, params)
+        sim.run(g)
+        sim.reset_stats()
+        qt_multiply(g, params, ra, rb)
+    else:
+        rs = qt_from_dense(g, a, params, upper=True)
+        sim.run(g)
+        sim.reset_stats()
+        qt_sym_square(g, params, rs)
+    res = sim.run(g)
+    return res.makespan, total_flops(g), n
+
+
+def main() -> None:
+    print("op,nodes,N,wall_s,gflop,speedup_vs_multiply")
+    n_per, d = 256, 24
+    walls = {}
+    for op in ("multiply", "sym_square"):
+        for nodes in (1, 2, 4, 8):
+            wall, fl, n = run(op, nodes, n_per, d, 64, 8)
+            walls[(op, nodes)] = wall
+            speed = walls[("multiply", nodes)] / wall \
+                if op == "sym_square" else 1.0
+            print(f"{op},{nodes},{n},{wall:.4f},{fl/1e9:.3f},"
+                  f"{speed:.2f}")
+    # symmetric square ~2x faster (paper Fig 9 right)
+    sp = walls[("multiply", 8)] / walls[("sym_square", 8)]
+    assert sp > 1.4, f"sym square speedup only {sp:.2f}"
+    # weak scaling: wall time grows far slower than the 8x work growth
+    growth = walls[("multiply", 8)] / walls[("multiply", 1)]
+    assert growth < 3.0, f"weak scaling wall grew {growth:.2f}x"
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,45 @@
+"""Run every benchmark (one per paper table/figure) as a subprocess.
+
+Subprocess isolation lets each benchmark own its jax/XLA configuration
+(bench_tpu_comm needs virtual devices; the others want the default
+single-device CPU) and makes one failure non-fatal to the rest.
+"""
+import pathlib
+import subprocess
+import sys
+import time
+
+BENCHES = [
+    ("bench_task_counts", "Figs 3-4: task counts per level vs bounds"),
+    ("bench_comm_scaling", "Table 1/Figs 12-13: weak-scaling comm/process"),
+    ("bench_batched_gemm", "Table 2: batched GEMM throughput vs blocksize"),
+    ("bench_leaf_multiply", "Figs 5-8: leaf multiply vs fill factor"),
+    ("bench_weak_scaling", "Fig 9: weak scaling + symmetric-square speedup"),
+    ("bench_s2_overlap", "Figs 10-11: S^2 on 3-D overlap matrices"),
+    ("bench_tpu_comm", "Fig 14: HLO collective bytes, halo vs SpSUMMA"),
+]
+
+
+def main() -> int:
+    root = pathlib.Path(__file__).parents[1]
+    failures = []
+    for name, desc in BENCHES:
+        print(f"\n=== {name} — {desc} ===", flush=True)
+        t0 = time.time()
+        res = subprocess.run(
+            [sys.executable, "-m", f"benchmarks.{name}"],
+            cwd=root, text=True, timeout=3600)
+        dt = time.time() - t0
+        status = "ok" if res.returncode == 0 else "FAILED"
+        print(f"=== {name}: {status} in {dt:.0f}s ===", flush=True)
+        if res.returncode:
+            failures.append(name)
+    if failures:
+        print(f"\nFAILED benchmarks: {failures}")
+        return 1
+    print("\nall benchmarks passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,69 @@
+"""Quickstart: locality-aware block-sparse matmul, host library + TPU engine.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+1. Build a banded matrix, represent it as a sparse quadtree of chunks
+   (paper §3), multiply with the Chunks-and-Tasks library on a simulated
+   8-worker cluster, and report the communication statistics that make
+   the paper's point (locality => tiny comm per worker).
+2. Run the same multiply through the static TPU engine (mask-pyramid
+   enumeration + capacity-bounded gather-GEMM-scatter, DESIGN.md §3) and
+   check both against dense numpy.
+"""
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import blocksparse as bsp
+from repro.core.bsmm import bsmm
+from repro.core.patterns import (banded_mask, block_mask_from_element_mask,
+                                 values_for_mask)
+from repro.core.quadtree import QTParams, qt_from_dense, qt_to_dense
+from repro.core.multiply import (qt_multiply, total_add_tasks,
+                                 total_multiply_tasks)
+from repro.core.tasks import ClusterSim, CTGraph
+
+
+def main() -> None:
+    n, bs, d = 512, 8, 16
+    a = values_for_mask(banded_mask(n, d), seed=1).astype(np.float32)
+    b = values_for_mask(banded_mask(n, d), seed=2).astype(np.float32)
+    want = a @ b
+
+    # --- 1. the paper's library on a simulated cluster ------------------
+    params = QTParams(n, leaf_n=64, bs=bs)
+    g = CTGraph()
+    ra = qt_from_dense(g, a, params)
+    rb = qt_from_dense(g, b, params)
+    sim = ClusterSim(n_workers=8, seed=0)
+    sim.run(g)                 # construction task program places inputs
+    sim.reset_stats()
+    rc = qt_multiply(g, params, ra, rb)
+    res = sim.run(g)
+    got = qt_to_dense(g, rc, params)
+    np.testing.assert_allclose(got, want, atol=1e-3)
+    print("quadtree multiply: OK")
+    print(f"  multiply tasks: {total_multiply_tasks(g)}, "
+          f"add tasks: {total_add_tasks(g)} (mult > add, paper §5)")
+    print(f"  virtual makespan: {res.makespan*1e3:.2f} ms on 8 workers, "
+          f"steals: {res.steals}")
+    mb = np.asarray(res.bytes_received) / 1e6
+    print(f"  comm per worker: avg {mb.mean():.2f} MB, max {mb.max():.2f}"
+          " MB  <- locality keeps this flat as the cluster grows")
+
+    # --- 2. the TPU engine (jit, static shapes) -------------------------
+    ma = block_mask_from_element_mask(np.abs(a) > 0, bs)
+    mb_ = block_mask_from_element_mask(np.abs(b) > 0, bs)
+    caps = bsp.plan_caps(ma, mb_)
+    A = bsp.from_dense(jnp.asarray(a), bs, int(ma.sum()) + 8)
+    B = bsp.from_dense(jnp.asarray(b), bs, int(mb_.sum()) + 8)
+    c, info = bsmm(A, B, pair_caps=caps, cap_c=bsp.plan_c_cap(ma, mb_))
+    np.testing.assert_allclose(np.asarray(bsp.to_dense(c)), want,
+                               atol=1e-2)
+    print("TPU block-sparse engine: OK")
+    print(f"  surviving block pairs: {int(info['n_pairs'])} "
+          f"(the paper's leaf-level task count), "
+          f"C blocks: {int(info['n_c_blocks'])}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,66 @@
+"""The paper's own application (§6.2): S^2 for electronic structure.
+
+    PYTHONPATH=src python examples/s2_electronic_structure.py
+
+End to end: generate a 3-D particle system (the water-cluster stand-in),
+order basis functions with the recursive divide-space procedure, build the
+overlap matrix S directly from nonzero coordinates (no dense detour),
+square it with the symmetric-square task program on a simulated cluster,
+truncate S^2 by Frobenius norm (paper §6.2), and report the Fig 10/11
+quantities: wall time scaling, per-worker memory, per-worker comm.
+"""
+import numpy as np
+
+from repro.core.patterns import (divide_space_order, overlap_pairs,
+                                 particle_cloud)
+from repro.core.quadtree import QTParams, qt_from_coo, qt_frob2, qt_stats
+from repro.core.multiply import qt_sym_square, total_multiply_tasks
+from repro.core.tasks import ClusterSim, CTGraph
+
+
+def gaussian_overlap(coords, order):
+    """Deterministic overlap-like values: S_ij = exp(-||xi-xj||^2 / 4)."""
+    pts = coords[order]
+
+    def value_fn(r, c):
+        d2 = ((pts[r] - pts[c]) ** 2).sum(-1)
+        return np.exp(-d2 / 4.0)
+
+    return value_fn
+
+
+def main() -> None:
+    workers = 8
+    print("n_basis  nnz/row(S)  mult_tasks  wall_ms  mem_MB/wk  "
+          "recv_MB/wk(avg,max)  ||S^2||_F")
+    for n_per in (8, 12, 16):
+        coords = particle_cloud(n_per, 3, seed=42)
+        order = divide_space_order(coords)
+        rows, cols = overlap_pairs(coords, 4.5, order=order)
+        npart = len(coords)
+        n = 1 << int(np.ceil(np.log2(npart)))
+        params = QTParams(n, max(n // 16, 32), 8)
+
+        g = CTGraph()
+        rs = qt_from_coo(g, rows, cols, params,
+                         value_fn=gaussian_overlap(coords, order),
+                         upper=True)
+        sim = ClusterSim(workers, seed=0)
+        sim.run(g)                      # S construction places chunks
+        sim.reset_stats()
+        rc = qt_sym_square(g, params, rs)
+        res = sim.run(g)
+
+        frob = np.sqrt(qt_frob2(g, rc))
+        recv = np.asarray(res.bytes_received) / 1e6
+        mem = np.mean(res.peak_owned) / 1e6
+        print(f"{npart:7d}  {len(rows)/npart:9.1f}  "
+              f"{total_multiply_tasks(g):10d}  {res.makespan*1e3:7.2f}  "
+              f"{mem:9.2f}  {recv.mean():6.2f},{recv.max():6.2f}  "
+              f"{frob:8.1f}")
+    print("\nwall time grows ~linearly with system size; comm per worker "
+          "stays bounded (paper Figs 10-11).")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,26 @@
+"""Batched serving example: prefill + greedy decode with KV/SSM caches.
+
+    PYTHONPATH=src python examples/serve_batched.py
+
+Serves three architectures through the identical decode loop the
+decode_32k / long_500k dry-run cells lower: a GQA dense model, a
+sliding-window model (ring-buffer-able cache), and an attention-free SSM
+(O(1) state — the long-context winner).
+"""
+import sys
+
+from repro.launch import serve as S
+
+
+def main() -> int:
+    for arch in ("llama3.2-3b", "h2o-danube-3-4b", "falcon-mamba-7b"):
+        print(f"\n--- {arch} (reduced config) ---")
+        rc = S.main(["--arch", arch, "--smoke", "--batch", "4",
+                     "--prompt-len", "16", "--gen", "16"])
+        if rc:
+            return rc
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,42 @@
+"""End-to-end LM training on CPU: data -> sharded step -> checkpoints ->
+fault drill -> restart, using the same builders the 256-chip launcher uses.
+
+    PYTHONPATH=src python examples/train_lm.py            # ~2 min
+    PYTHONPATH=src python examples/train_lm.py --big      # ~100M params
+
+Defaults train a reduced olmo-1b for 200 steps and assert the loss drops;
+--big switches to a ~100M-parameter config (slower on CPU, same code).
+A failure is injected mid-run to demonstrate checkpoint/restart.
+"""
+import argparse
+import sys
+
+from repro.launch import train as T
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--big", action="store_true",
+                    help="~100M params instead of the tiny smoke config")
+    ap.add_argument("--steps", type=int, default=200)
+    args = ap.parse_args()
+
+    if args.big:
+        # ~100M-parameter llama-style config through the same path
+        import repro.configs.olmo_1b as base
+        import repro.configs as C
+        big = base.CONFIG.scaled(n_layers=8, d_model=512, n_heads=8,
+                                 n_kv_heads=8, d_ff=2048, vocab=32000,
+                                 head_dim=64, dtype="float32")
+        print(f"params ~= {big.param_count()/1e6:.0f}M")
+        # monkeypatch the smoke config for the driver
+        base.SMOKE_CONFIG = big
+    argv = ["--arch", "olmo-1b", "--smoke",
+            "--steps", str(args.steps), "--batch", "8", "--seq", "128",
+            "--ckpt-dir", "/tmp/repro_example_ckpt",
+            "--drill-fail-step", str(args.steps // 2)]
+    return T.main(argv)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,2 @@
+from .store import (CheckpointManager, load_checkpoint,  # noqa: F401
+                    save_checkpoint)

@@ -1,0 +1,155 @@
+"""Sharded checkpoint save/restore with async write and atomic commit.
+
+Layout (one directory per step):
+
+    <dir>/step_000100/
+        manifest.json        # tree structure, shapes, dtypes, step
+        leaf_00000.npy ...   # one file per pytree leaf (host-gathered)
+    <dir>/step_000100.COMMITTED   # marker written last (atomic rename)
+
+Design notes for the 1000+-node target (documented here, exercised at
+this repo's scale in tests):
+
+* each leaf is gathered to host and written once — on a real pod slice
+  this becomes per-host shard files (process_index suffix) with the same
+  manifest/commit protocol; the commit marker is what restart trusts;
+* ``CheckpointManager`` writes asynchronously on a worker thread (training
+  continues; ``wait()`` joins before the next save), keeps the last
+  ``keep`` checkpoints, and ``restore_latest`` ignores uncommitted
+  (partially written) directories — crash-during-save is safe;
+* restore takes a target sharding tree and ``jax.device_put``s each leaf,
+  so a checkpoint saved on one mesh can be restored onto another
+  (elastic re-scale path; see runtime/elastic.py).
+"""
+from __future__ import annotations
+
+import concurrent.futures as futures
+import json
+import pathlib
+import shutil
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+
+def _flatten(tree) -> tuple[list, Any]:
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    return leaves, treedef
+
+
+def save_checkpoint(directory, step: int, tree, *, blocking: bool = True
+                    ) -> pathlib.Path:
+    """Write a checkpoint; returns the committed path."""
+    directory = pathlib.Path(directory)
+    directory.mkdir(parents=True, exist_ok=True)
+    dest = directory / f"step_{step:08d}"
+    tmp = directory / f".tmp_step_{step:08d}"
+    if tmp.exists():
+        shutil.rmtree(tmp)
+    tmp.mkdir()
+    leaves, treedef = _flatten(tree)
+    manifest = {
+        "step": step,
+        "treedef": str(treedef),
+        "leaves": [],
+    }
+    for i, leaf in enumerate(leaves):
+        arr = np.asarray(jax.device_get(leaf))
+        dtype = str(arr.dtype)
+        if arr.dtype.kind == "V" or dtype == "bfloat16":
+            arr = arr.astype(np.float32)   # npy-safe container (exact)
+        np.save(tmp / f"leaf_{i:05d}.npy", arr)
+        manifest["leaves"].append(
+            {"shape": list(arr.shape), "dtype": dtype})
+    (tmp / "manifest.json").write_text(json.dumps(manifest))
+    if dest.exists():
+        shutil.rmtree(dest)
+    tmp.rename(dest)                               # atomic commit
+    (directory / f"step_{step:08d}.COMMITTED").touch()
+    return dest
+
+
+def load_checkpoint(directory, step: int, like, *, shardings=None):
+    """Restore into the structure of ``like`` (arrays or ShapeDtypeStructs).
+
+    ``shardings``: optional matching tree of NamedShardings — leaves are
+    device_put with them (cross-mesh restore)."""
+    directory = pathlib.Path(directory)
+    src = directory / f"step_{step:08d}"
+    if not (directory / f"step_{step:08d}.COMMITTED").exists():
+        raise FileNotFoundError(f"checkpoint step {step} not committed")
+    manifest = json.loads((src / "manifest.json").read_text())
+    leaves, treedef = _flatten(like)
+    assert len(leaves) == len(manifest["leaves"]), "tree mismatch"
+    sh_leaves = jax.tree_util.tree_leaves(shardings) if shardings \
+        else [None] * len(leaves)
+    out = []
+    for i, (ref, sh) in enumerate(zip(leaves, sh_leaves)):
+        arr = np.load(src / f"leaf_{i:05d}.npy")
+        ref_shape = tuple(getattr(ref, "shape", np.shape(ref)))
+        assert tuple(arr.shape) == ref_shape, \
+            f"leaf {i}: {arr.shape} != {ref_shape}"
+        dtype = getattr(ref, "dtype", arr.dtype)
+        if sh is not None:
+            out.append(jax.device_put(arr.astype(dtype), sh))
+        else:
+            out.append(jax.numpy.asarray(arr.astype(dtype)))
+    return jax.tree_util.tree_unflatten(treedef, out), manifest["step"]
+
+
+def latest_step(directory) -> Optional[int]:
+    directory = pathlib.Path(directory)
+    if not directory.exists():
+        return None
+    steps = sorted(int(p.stem.split("_")[1])
+                   for p in directory.glob("step_*.COMMITTED"))
+    return steps[-1] if steps else None
+
+
+class CheckpointManager:
+    """Async save + retention + latest-restore."""
+
+    def __init__(self, directory, keep: int = 3):
+        self.directory = pathlib.Path(directory)
+        self.keep = keep
+        self._pool = futures.ThreadPoolExecutor(max_workers=1)
+        self._pending: Optional[futures.Future] = None
+
+    def save(self, step: int, tree, blocking: bool = False):
+        self.wait()
+        # device_get on the caller thread (consistent snapshot), write async
+        host_tree = jax.tree.map(lambda x: np.asarray(jax.device_get(x)),
+                                 tree)
+        if blocking:
+            save_checkpoint(self.directory, step, host_tree)
+            self._gc()
+            return
+        self._pending = self._pool.submit(self._save_and_gc, step,
+                                          host_tree)
+
+    def _save_and_gc(self, step, host_tree):
+        save_checkpoint(self.directory, step, host_tree)
+        self._gc()
+
+    def _gc(self):
+        steps = sorted(int(p.stem.split("_")[1])
+                       for p in self.directory.glob("step_*.COMMITTED"))
+        for s in steps[:-self.keep] if self.keep else []:
+            shutil.rmtree(self.directory / f"step_{s:08d}",
+                          ignore_errors=True)
+            (self.directory / f"step_{s:08d}.COMMITTED").unlink(
+                missing_ok=True)
+
+    def wait(self):
+        if self._pending is not None:
+            self._pending.result()
+            self._pending = None
+
+    def restore_latest(self, like, shardings=None):
+        self.wait()
+        step = latest_step(self.directory)
+        if step is None:
+            return None, None
+        return load_checkpoint(self.directory, step, like,
+                               shardings=shardings)

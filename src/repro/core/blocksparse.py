@@ -1,0 +1,269 @@
+"""TPU-native static-shape block-sparse matrix format (DESIGN.md §3).
+
+This is the XLA/TPU rendering of the paper's quadtree matrix chunk (§3.1):
+
+* a **packed block array** holds only nonzero ``bs x bs`` blocks, with a
+  static *capacity* ``cap`` (XLA needs static shapes; capacity-bounded
+  dynamic sparsity via ``jnp.nonzero(size=cap)`` keeps the paper's
+  "no a-priori knowledge, no symbolic step" property — occupancy is detected
+  from the data at runtime, inside jit);
+* a **slot map** ``slot[i, k] -> packed index`` replaces the chunk-identifier
+  indirection of the Chunks and Tasks runtime;
+* the **mask pyramid** (:func:`mask_pyramid`) is the quadtree itself: boolean
+  occupancy at every level, level 0 = root.  NIL chunk identifiers at any
+  level (paper §3.1) == False entries at any pyramid level.
+
+Everything in this module is jit-compatible; shapes depend only on
+``(n, bs, cap)`` which are trace-time constants.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class BlockSparse:
+    """Packed block-sparse matrix with static capacity.
+
+    blocks : (cap, bs, bs)  packed nonzero blocks (padding slots are zero)
+    rows   : (cap,) int32   block-row of each slot; ``grid`` marks padding
+    cols   : (cap,) int32   block-col of each slot; ``grid`` marks padding
+    nnzb   : () int32       number of valid slots
+    slot   : (grid+1, grid+1) int32  packed index of block (i,k); -1 = empty.
+             The extra row/col absorbs padding coordinates.
+    """
+    blocks: jax.Array
+    rows: jax.Array
+    cols: jax.Array
+    nnzb: jax.Array
+    slot: jax.Array
+
+    # -- pytree plumbing (grid/bs/cap derivable from array shapes) ----------
+    def tree_flatten(self):
+        return (self.blocks, self.rows, self.cols, self.nnzb, self.slot), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, leaves):
+        return cls(*leaves)
+
+    # -- static properties ---------------------------------------------------
+    @property
+    def cap(self) -> int:
+        return self.blocks.shape[0]
+
+    @property
+    def bs(self) -> int:
+        return self.blocks.shape[1]
+
+    @property
+    def grid(self) -> int:
+        return self.slot.shape[0] - 1
+
+    @property
+    def n(self) -> int:
+        return self.grid * self.bs
+
+    # -- views ---------------------------------------------------------------
+    def mask(self) -> jax.Array:
+        """(grid, grid) bool occupancy — quadtree leaf level."""
+        return self.slot[:-1, :-1] >= 0
+
+    def valid(self) -> jax.Array:
+        """(cap,) bool — which packed slots hold real blocks."""
+        return self.rows < self.grid
+
+
+def from_dense(a: jax.Array, bs: int, cap: int) -> BlockSparse:
+    """Detect occupancy and pack nonzero blocks (jit-compatible).
+
+    Zero blocks are detected from the data — the XLA analogue of the
+    library "dynamically detecting" sparsity (paper abstract).
+    """
+    n = a.shape[0]
+    assert a.shape == (n, n) and n % bs == 0
+    g = n // bs
+    tiles = a.reshape(g, bs, g, bs).transpose(0, 2, 1, 3)
+    occ = jnp.any(tiles != 0, axis=(2, 3))
+    rows, cols = jnp.nonzero(occ, size=cap, fill_value=g)
+    nnzb = jnp.sum(occ).astype(jnp.int32)
+    rows = rows.astype(jnp.int32)
+    cols = cols.astype(jnp.int32)
+    valid = rows < g
+    data = tiles[jnp.minimum(rows, g - 1), jnp.minimum(cols, g - 1)]
+    data = jnp.where(valid[:, None, None], data, 0)
+    slot = jnp.full((g + 1, g + 1), -1, dtype=jnp.int32)
+    slot = slot.at[rows, cols].set(
+        jnp.where(valid, jnp.arange(cap, dtype=jnp.int32), -1))
+    # padding rows/cols == g all hit slot[g, g]; reset it unless genuinely set
+    slot = slot.at[g, :].set(-1).at[:, g].set(-1)
+    return BlockSparse(data, rows, cols, nnzb, slot)
+
+
+def from_blocks(rows: np.ndarray, cols: np.ndarray, blocks: jax.Array,
+                grid: int, cap: int) -> BlockSparse:
+    """Pack an explicit (rows, cols, blocks) triplet list (host-side setup)."""
+    k = len(rows)
+    assert k <= cap, f"{k} blocks exceed capacity {cap}"
+    bs = blocks.shape[-1]
+    data = jnp.zeros((cap, bs, bs), blocks.dtype).at[:k].set(blocks)
+    r = jnp.full((cap,), grid, jnp.int32).at[:k].set(
+        jnp.asarray(rows, jnp.int32))
+    c = jnp.full((cap,), grid, jnp.int32).at[:k].set(
+        jnp.asarray(cols, jnp.int32))
+    slot = jnp.full((grid + 1, grid + 1), -1, jnp.int32)
+    slot = slot.at[r[:k], c[:k]].set(jnp.arange(k, dtype=jnp.int32))
+    return BlockSparse(data, r, c, jnp.int32(k), slot)
+
+
+def to_dense(m: BlockSparse) -> jax.Array:
+    g, bs = m.grid, m.bs
+    tiles = jnp.zeros((g + 1, g + 1, bs, bs), m.blocks.dtype)
+    tiles = tiles.at[m.rows, m.cols].add(m.blocks)
+    return tiles[:g, :g].transpose(0, 2, 1, 3).reshape(g * bs, g * bs)
+
+
+def mask_pyramid(mask: jax.Array) -> list[jax.Array]:
+    """Quadtree occupancy masks, finest (leaf) first, 1x1 root last.
+
+    ``pyramid[0]`` is the (grid, grid) leaf mask; each coarser level ORs 2x2
+    children — a NIL submatrix at level l == False at pyramid[L - l].
+    """
+    g = mask.shape[0]
+    assert g & (g - 1) == 0, "grid must be a power of two"
+    out = [mask]
+    while g > 1:
+        g //= 2
+        mask = mask.reshape(g, 2, g, 2).any(axis=(1, 3))
+        out.append(mask)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Pair enumeration — Algorithm 1 rendered statically.
+#
+# The recursive task expansion of Algorithm 1 ("for m, n, k in {1,2}: register
+# multiply(A_mk, B_kn)") becomes a level-by-level expansion of surviving
+# (i, k, j) triples: each triple at grid G has 8 children at grid 2G, and a
+# child survives iff A's and B's occupancy masks at that level are both
+# nonzero — exactly the NIL check on line 2 of Algorithm 1.  The number of
+# surviving triples per level is the paper's "number of multiplication tasks
+# at level l" (eq. (1)/(8)), so enumeration work is proportional to the
+# paper's task count, not to grid^3.
+# ---------------------------------------------------------------------------
+
+_CHILD_OFFSETS = np.array(
+    [[di, dk, dj] for di in (0, 1) for dk in (0, 1) for dj in (0, 1)],
+    dtype=np.int32)  # (8, 3)
+
+
+def enumerate_pairs_hier(mask_a: jax.Array, mask_b: jax.Array,
+                         caps: Sequence[int],
+                         mask_c: Optional[jax.Array] = None
+                         ) -> tuple[jax.Array, jax.Array]:
+    """Hierarchically enumerate (i, k, j) with A[i,k] and B[k,j] nonzero.
+
+    caps[l] bounds the number of surviving triples at level l+1 (level 0 is
+    the 1x1 root, always 1 triple).  Returns (pairs, count): pairs is
+    (caps[-1], 3) int32 with padding rows equal to ``grid`` (out of range),
+    count the number of valid triples.
+
+    ``mask_c``, when given, additionally requires the *output* cell (i, j)
+    to be set at every level — used by the distributed engine to restrict
+    enumeration to the C blocks a device owns (the quadtree analogue of
+    "only compute your own submatrix products").
+
+    Capacity overflow drops triples deterministically (the first ``cap`` in
+    row-major order are kept) — callers size caps from the §5 bounds or via
+    :func:`plan_caps`.
+    """
+    g = mask_a.shape[0]
+    levels = int(np.log2(g))
+    assert len(caps) == levels, f"need {levels} caps, got {len(caps)}"
+    pyr_a = mask_pyramid(mask_a)   # [leaf ... root]
+    pyr_b = mask_pyramid(mask_b)
+    pyr_c = mask_pyramid(mask_c) if mask_c is not None else None
+
+    pairs = jnp.zeros((1, 3), jnp.int32)   # the root triple (0, 0, 0)
+    alive = pyr_a[-1][0, 0] & pyr_b[-1][0, 0]
+    count = alive.astype(jnp.int32)
+    offs = jnp.asarray(_CHILD_OFFSETS)
+
+    for l in range(levels):
+        ma = pyr_a[levels - 1 - l]    # mask at the children's level
+        mb = pyr_b[levels - 1 - l]
+        gl = ma.shape[0]
+        cap_prev = pairs.shape[0]
+        parent_valid = jnp.arange(cap_prev) < count
+        children = pairs[:, None, :] * 2 + offs[None, :, :]
+        flat = children.reshape(-1, 3)
+        i, k, j = flat[:, 0], flat[:, 1], flat[:, 2]
+        inb = (i < gl) & (k < gl) & (j < gl)
+        ic, kc, jc = (jnp.minimum(i, gl - 1), jnp.minimum(k, gl - 1),
+                      jnp.minimum(j, gl - 1))
+        ok = (inb & ma[ic, kc] & mb[kc, jc]
+              & jnp.repeat(parent_valid, 8))
+        if pyr_c is not None:
+            ok = ok & pyr_c[levels - 1 - l][ic, jc]
+        idx = jnp.nonzero(ok, size=caps[l], fill_value=flat.shape[0])[0]
+        count = jnp.sum(ok).astype(jnp.int32)
+        padded = jnp.concatenate(
+            [flat, jnp.full((1, 3), 2 * gl, jnp.int32)], axis=0)
+        pairs = padded[jnp.minimum(idx, flat.shape[0])]
+        # clamp padding coordinates into "out of range" marker gl
+        pairs = jnp.where((jnp.arange(caps[l]) < count)[:, None], pairs, gl)
+    return pairs, count
+
+
+def enumerate_pairs_flat(mask_a: jax.Array, mask_b: jax.Array,
+                         cap: int) -> tuple[jax.Array, jax.Array]:
+    """O(grid^3) reference enumeration (the 'no locality exploitation'
+    baseline — what a SUMMA-style static schedule effectively pays)."""
+    g = mask_a.shape[0]
+    m3 = mask_a[:, :, None] & mask_b[None, :, :]      # (i, k, j)
+    i, k, j = jnp.nonzero(m3, size=cap, fill_value=g)
+    pairs = jnp.stack([i, k, j], axis=1).astype(jnp.int32)
+    return pairs, jnp.sum(m3).astype(jnp.int32)
+
+
+def plan_caps(mask_a: np.ndarray, mask_b: np.ndarray,
+              slack: float = 1.25, round_to: int = 64) -> list[int]:
+    """Host-side capacity schedule: exact per-level surviving-triple counts
+    (the paper's task counts, Figs 3-4) with head-room.  Runs on concrete
+    masks before tracing; the jit'd program is specialized to these caps."""
+    g = mask_a.shape[0]
+    levels = int(np.log2(g))
+    ma, mb = np.asarray(mask_a), np.asarray(mask_b)
+    caps = []
+    pyr_a, pyr_b = _np_pyramid(ma), _np_pyramid(mb)
+    for l in range(levels):
+        a_l = pyr_a[levels - 1 - l].astype(np.int64)
+        b_l = pyr_b[levels - 1 - l].astype(np.int64)
+        cnt = int((a_l.sum(0) * b_l.sum(1)).sum())  # sum_k colA_k * rowB_k
+        cap = max(round_to, int(np.ceil(cnt * slack / round_to)) * round_to)
+        caps.append(cap)
+    return caps
+
+
+def _np_pyramid(mask: np.ndarray) -> list[np.ndarray]:
+    out = [mask]
+    g = mask.shape[0]
+    while g > 1:
+        g //= 2
+        mask = mask.reshape(g, 2, g, 2).any(axis=(1, 3))
+        out.append(mask)
+    return out
+
+
+def plan_c_cap(mask_a: np.ndarray, mask_b: np.ndarray,
+               slack: float = 1.25, round_to: int = 64) -> int:
+    """Host-side capacity for the C occupancy (mask_a @ mask_b)."""
+    prod = (np.asarray(mask_a, np.int64) @ np.asarray(mask_b, np.int64)) > 0
+    cnt = int(prod.sum())
+    return max(round_to, int(np.ceil(cnt * slack / round_to)) * round_to)

@@ -1,0 +1,159 @@
+"""Capacity-bounded block-sparse matrix-matrix multiply under jit.
+
+The TPU rendering of the paper's multiply (Algorithm 1 + §4.1):
+
+1. **Enumerate** surviving (i, k, j) triples hierarchically through the mask
+   pyramid (quadtree NIL-pruning, cost ∝ the paper's task count);
+2. **Gather** the A[i,k] and B[k,j] packed blocks (the paper's chunk fetch);
+3. **Batched GEMM** all pairs at once — the paper's sum-of-outer-products /
+   cuBLAS-batched-gemm structure (Fig 2), here one MXU-shaped Pallas (or
+   XLA) batch matmul;
+4. **Scatter-add** products into C's packed slots via segment-sum — the
+   paper's addition-task tree collapsed into one associative reduction.
+
+All shapes are static: capacities come from host-side planning
+(:func:`~repro.core.blocksparse.plan_caps`) or from the §5 closed-form
+bounds.  Overflow beyond capacity drops blocks (callers assert against
+``count`` in tests).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Callable, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .blocksparse import (BlockSparse, enumerate_pairs_flat,
+                          enumerate_pairs_hier, from_dense, mask_pyramid,
+                          to_dense)
+
+GemmFn = Callable[[jax.Array, jax.Array], jax.Array]
+
+
+def _default_gemm(a: jax.Array, b: jax.Array) -> jax.Array:
+    """(p, bs, bs) x (p, bs, bs) batched GEMM; XLA fallback for the Pallas
+    kernel (kernels/batched_gemm.py) — identical contract."""
+    return jnp.einsum("pik,pkj->pij", a, b,
+                      preferred_element_type=jnp.float32).astype(a.dtype)
+
+
+def compute_c_structure(mask_a: jax.Array, mask_b: jax.Array, cap_c: int
+                        ) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Occupancy of C = A @ B: rows, cols, slot map, count (jit-compatible).
+
+    The boolean matmul is the one-shot equivalent of the create-from-ids
+    task tree: it tells us which C blocks exist before any flop is spent.
+    """
+    g = mask_a.shape[0]
+    mc = (jnp.matmul(mask_a.astype(jnp.int32), mask_b.astype(jnp.int32)) > 0)
+    crows, ccols = jnp.nonzero(mc, size=cap_c, fill_value=g)
+    crows = crows.astype(jnp.int32)
+    ccols = ccols.astype(jnp.int32)
+    valid = crows < g
+    cslot = jnp.full((g + 1, g + 1), -1, jnp.int32)
+    cslot = cslot.at[crows, ccols].set(
+        jnp.where(valid, jnp.arange(cap_c, dtype=jnp.int32), -1))
+    cslot = cslot.at[g, :].set(-1).at[:, g].set(-1)
+    return crows, ccols, cslot, jnp.sum(mc).astype(jnp.int32)
+
+
+def bsmm(a: BlockSparse, b: BlockSparse, *,
+         pair_caps: Sequence[int], cap_c: int,
+         gemm_fn: Optional[GemmFn] = None,
+         hierarchical: bool = True,
+         use_pair_kernel: bool = False,
+         interpret: bool = False) -> tuple[BlockSparse, dict]:
+    """C = A @ B, block-sparse x block-sparse -> block-sparse.
+
+    ``use_pair_kernel=True`` runs the fused Pallas gather-GEMM-scatter
+    (kernels/bsmm_pairs.py) instead of gather + batched GEMM + segment-sum.
+    Returns (C, info); info carries the dynamic counts (pairs, c blocks) so
+    callers can assert no capacity overflow occurred.
+    """
+    assert a.grid == b.grid and a.bs == b.bs
+    g, bs = a.grid, a.bs
+    gemm = gemm_fn or _default_gemm
+
+    mask_a, mask_b = a.mask(), b.mask()
+    if hierarchical:
+        pairs, n_pairs = enumerate_pairs_hier(mask_a, mask_b, pair_caps)
+    else:
+        pairs, n_pairs = enumerate_pairs_flat(mask_a, mask_b, pair_caps[-1])
+
+    crows, ccols, cslot, n_c = compute_c_structure(mask_a, mask_b, cap_c)
+
+    pi, pk, pj = pairs[:, 0], pairs[:, 1], pairs[:, 2]
+    # slot lookups; padding triples (coords == g) resolve to -1
+    sa = a.slot[pi, pk]
+    sb = b.slot[pk, pj]
+    sc = cslot[pi, pj]
+    pvalid = (sa >= 0) & (sb >= 0) & (sc >= 0)
+    seg = jnp.where(pvalid, sc, cap_c)          # park invalid in extra bin
+
+    if use_pair_kernel:
+        from repro.kernels import ops as kops
+        order = jnp.argsort(seg)                # kernel needs ascending seg
+        c_blocks = kops.bsmm_pairs(
+            a.blocks, b.blocks,
+            jnp.maximum(sa, 0)[order], jnp.maximum(sb, 0)[order],
+            seg[order], cap_c=cap_c, use_pallas=True, interpret=interpret)
+    else:
+        a_blocks = a.blocks[jnp.maximum(sa, 0)]
+        b_blocks = b.blocks[jnp.maximum(sb, 0)]
+        prods = gemm(a_blocks, b_blocks)
+        prods = jnp.where(pvalid[:, None, None], prods, 0)
+        c_blocks = jax.ops.segment_sum(
+            prods, seg, num_segments=cap_c + 1)[:cap_c]
+
+    c = BlockSparse(c_blocks.astype(a.blocks.dtype), crows, ccols, n_c, cslot)
+    return c, {"n_pairs": n_pairs, "n_c_blocks": n_c,
+               "pair_cap": pairs.shape[0], "c_cap": cap_c}
+
+
+def bsmm_dense_ref(a_dense: jax.Array, b_dense: jax.Array) -> jax.Array:
+    """Oracle: plain dense product."""
+    return a_dense @ b_dense
+
+
+@partial(jax.jit, static_argnames=("bs", "cap_a", "cap_b", "cap_c",
+                                   "pair_caps", "hierarchical"))
+def bsmm_from_dense(a_dense: jax.Array, b_dense: jax.Array, *, bs: int,
+                    cap_a: int, cap_b: int, cap_c: int,
+                    pair_caps: tuple, hierarchical: bool = True
+                    ) -> tuple[jax.Array, dict]:
+    """End-to-end jit: pack -> multiply -> unpack (test/bench convenience)."""
+    a = from_dense(a_dense, bs, cap_a)
+    b = from_dense(b_dense, bs, cap_b)
+    c, info = bsmm(a, b, pair_caps=list(pair_caps), cap_c=cap_c)
+    return to_dense(c), info
+
+
+# ---------------------------------------------------------------------------
+# Work accounting (bridges to §5 / Figs 3-4 at the block level)
+# ---------------------------------------------------------------------------
+
+def pair_counts_per_level(mask_a: np.ndarray, mask_b: np.ndarray
+                          ) -> dict[int, int]:
+    """Exact surviving-triple counts per quadtree level for C = A B.
+
+    Level convention matches the paper: 0 = root, L = leaf.  These equal the
+    paper's multiplication-task counts when blocksize == leaf size.
+    """
+    from .blocksparse import _np_pyramid
+    pyr_a = _np_pyramid(np.asarray(mask_a))
+    pyr_b = _np_pyramid(np.asarray(mask_b))
+    L = len(pyr_a) - 1
+    out = {}
+    for l in range(L + 1):
+        a_l = pyr_a[L - l].astype(np.int64)
+        b_l = pyr_b[L - l].astype(np.int64)
+        out[l] = int((a_l.sum(0) * b_l.sum(1)).sum())
+    return out
+
+
+def useful_flops(mask_a: np.ndarray, mask_b: np.ndarray, bs: int) -> float:
+    """2 * bs^3 * (# leaf-level pairs): the flops a perfect engine performs."""
+    counts = pair_counts_per_level(mask_a, mask_b)
+    return 2.0 * bs ** 3 * counts[max(counts)]

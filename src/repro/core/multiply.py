@@ -1,0 +1,309 @@
+"""Quadtree matrix operation task types (paper §3.2-§3.3, Algorithms 1-2).
+
+Implemented task types (names match the paper):
+
+* ``multiply``      — C = op(A) op(B), op ∈ {id, transpose}  (Algorithm 1)
+* ``add``           — C = A + B                               (Algorithm 2)
+* ``create``        — creation from submatrix identifiers     (§3.2)
+* ``sym_square``    — C = A², A symmetric upper storage       (§3.3)
+* ``syrk``          — C = A Aᵀ or AᵀA, C upper storage        (§3.3)
+* ``sym_multiply``  — C = S B or B S, S symmetric upper       (§3.3)
+
+NIL handling follows Algorithms 1-2 line 2 / fallback-execute semantics: a
+task with a NIL input is never *executed* with data — here we resolve the NIL
+check at registration time (equivalently: the runtime short-circuits to the
+fallback), so ``count_kinds()['multiply']`` equals the paper's "number of
+multiplication tasks" (eq. (1) counts both-nonzero products only).
+
+Additions with exactly one NIL operand alias the other chunk id (Alg 2 lines
+15-18: "C = A" is an identifier copy, no new chunk, no work).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+from .leaf import (LeafStats, leaf_add, leaf_multiply, leaf_sym_multiply,
+                   leaf_sym_square, leaf_syrk)
+from .quadtree import MatrixChunk, QTParams
+from .tasks import Alias, CTGraph, Dep
+
+
+def _level_of(params: QTParams, n: int) -> int:
+    return int(round(math.log2(params.n // n)))
+
+
+def _register_create(g: CTGraph, n: int, cids: tuple, upper: bool,
+                     level: int) -> Optional[int]:
+    """Creation-from-submatrix-identifiers task (§3.2).
+
+    Consumes chunk *identifiers* (fetch=False: no data transfer) and produces
+    the small internal matrix chunk.  Returns NIL if every child is NIL.
+    """
+    if all(g.is_nil(c) for c in cids):
+        return None
+
+    def fn(*ids) -> MatrixChunk:
+        norm = tuple(None if g.is_nil(i) else i for i in ids)
+        return MatrixChunk(n, children=norm, upper=upper)
+
+    nid = g.register_task("create", fn,
+                          [Dep(c, fetch=False) for c in cids])
+    g.nodes[nid].level = level
+    return nid
+
+
+def qt_add(g: CTGraph, params: QTParams, a: Optional[int], b: Optional[int]
+           ) -> Optional[int]:
+    """C = A + B (Algorithm 2). Single-NIL cases alias, both-NIL is NIL."""
+    if g.is_nil(a):
+        return b if not g.is_nil(b) else None
+    if g.is_nil(b):
+        return a
+
+    ac: MatrixChunk = g.value_of(a)
+    bc: MatrixChunk = g.value_of(b)
+    assert ac.n == bc.n and ac.upper == bc.upper
+    level = _level_of(params, ac.n)
+
+    if ac.is_leaf:
+        def fn(av: MatrixChunk, bv: MatrixChunk):
+            res = leaf_add(av.leaf, bv.leaf)
+            return MatrixChunk(av.n, leaf=res, upper=av.upper)
+
+        nid = g.register_task("add", fn, [Dep(a), Dep(b)])
+        g.nodes[nid].level = level
+        return nid
+
+    def fn(av: MatrixChunk, bv: MatrixChunk):
+        cids = tuple(
+            qt_add(g, params, av.children[i], bv.children[i])
+            for i in range(4))
+        return Alias(_register_create(g, av.n, cids, av.upper, level))
+
+    nid = g.register_task("add", fn, [Dep(a), Dep(b)])
+    g.nodes[nid].level = level
+    return nid
+
+
+def qt_multiply(g: CTGraph, params: QTParams, a: Optional[int],
+                b: Optional[int], ta: bool = False, tb: bool = False
+                ) -> Optional[int]:
+    """C = op(A) op(B) (Algorithm 1 + transposed variants, §3.2)."""
+    if g.is_nil(a) or g.is_nil(b):
+        return None
+    ac: MatrixChunk = g.value_of(a)
+    level = _level_of(params, ac.n)
+
+    if ac.is_leaf:
+        stats = LeafStats()
+
+        def fn(av: MatrixChunk, bv: MatrixChunk):
+            res = leaf_multiply(av.leaf, bv.leaf, ta=ta, tb=tb, stats=stats)
+            if res.is_zero():
+                return None
+            return MatrixChunk(av.n, leaf=res)
+
+        nid = g.register_task("multiply", fn, [Dep(a), Dep(b)])
+        g.nodes[nid].flops = stats.flops
+        g.nodes[nid].level = level
+        return nid
+
+    def fn(av: MatrixChunk, bv: MatrixChunk):
+        def asub(m: int, k: int) -> Optional[int]:
+            return av.child(k, m) if ta else av.child(m, k)
+
+        def bsub(k: int, n: int) -> Optional[int]:
+            return bv.child(n, k) if tb else bv.child(k, n)
+
+        cids = []
+        for m in (0, 1):
+            for n in (0, 1):
+                y1 = qt_multiply(g, params, asub(m, 0), bsub(0, n), ta, tb)
+                y2 = qt_multiply(g, params, asub(m, 1), bsub(1, n), ta, tb)
+                cids.append(qt_add(g, params, y1, y2))
+        return Alias(_register_create(g, av.n, tuple(cids), False, level))
+
+    nid = g.register_task("multiply", fn, [Dep(a), Dep(b)])
+    g.nodes[nid].level = level
+    return nid
+
+
+def qt_sym_square(g: CTGraph, params: QTParams, a: Optional[int]
+                  ) -> Optional[int]:
+    """C = A², A symmetric in upper-triangular storage (§3.3)."""
+    if g.is_nil(a):
+        return None
+    ac: MatrixChunk = g.value_of(a)
+    assert ac.upper
+    level = _level_of(params, ac.n)
+
+    if ac.is_leaf:
+        stats = LeafStats()
+
+        def fn(av: MatrixChunk):
+            res = leaf_sym_square(av.leaf, stats=stats)
+            if res.is_zero():
+                return None
+            return MatrixChunk(av.n, leaf=res, upper=True)
+
+        nid = g.register_task("sym_square", fn, [Dep(a)])
+        g.nodes[nid].flops = stats.flops
+        g.nodes[nid].level = level
+        return nid
+
+    def fn(av: MatrixChunk):
+        a00, a01, _, a11 = av.children
+        c00 = qt_add(g, params,
+                     qt_sym_square(g, params, a00),
+                     qt_syrk(g, params, a01, trans=False))
+        c01 = qt_add(g, params,
+                     qt_sym_multiply(g, params, a00, a01, side="left"),
+                     qt_sym_multiply(g, params, a11, a01, side="right"))
+        c11 = qt_add(g, params,
+                     qt_sym_square(g, params, a11),
+                     qt_syrk(g, params, a01, trans=True))
+        return Alias(_register_create(g, av.n, (c00, c01, None, c11), True,
+                                      level))
+
+    nid = g.register_task("sym_square", fn, [Dep(a)])
+    g.nodes[nid].level = level
+    return nid
+
+
+def qt_syrk(g: CTGraph, params: QTParams, a: Optional[int],
+            trans: bool = False) -> Optional[int]:
+    """C = A Aᵀ (trans=False) or AᵀA (trans=True); C upper storage (§3.3)."""
+    if g.is_nil(a):
+        return None
+    ac: MatrixChunk = g.value_of(a)
+    assert not ac.upper
+    level = _level_of(params, ac.n)
+
+    if ac.is_leaf:
+        stats = LeafStats()
+
+        def fn(av: MatrixChunk):
+            res = leaf_syrk(av.leaf, trans=trans, stats=stats)
+            if res.is_zero():
+                return None
+            return MatrixChunk(av.n, leaf=res, upper=True)
+
+        nid = g.register_task("syrk", fn, [Dep(a)])
+        g.nodes[nid].flops = stats.flops
+        g.nodes[nid].level = level
+        return nid
+
+    def fn(av: MatrixChunk):
+        a00, a01, a10, a11 = av.children
+        if not trans:   # C = A Aᵀ
+            c00 = qt_add(g, params, qt_syrk(g, params, a00, False),
+                         qt_syrk(g, params, a01, False))
+            c01 = qt_add(g, params,
+                         qt_multiply(g, params, a00, a10, tb=True),
+                         qt_multiply(g, params, a01, a11, tb=True))
+            c11 = qt_add(g, params, qt_syrk(g, params, a10, False),
+                         qt_syrk(g, params, a11, False))
+        else:           # C = Aᵀ A
+            c00 = qt_add(g, params, qt_syrk(g, params, a00, True),
+                         qt_syrk(g, params, a10, True))
+            c01 = qt_add(g, params,
+                         qt_multiply(g, params, a00, a01, ta=True),
+                         qt_multiply(g, params, a10, a11, ta=True))
+            c11 = qt_add(g, params, qt_syrk(g, params, a01, True),
+                         qt_syrk(g, params, a11, True))
+        return Alias(_register_create(g, av.n, (c00, c01, None, c11), True,
+                                      level))
+
+    nid = g.register_task("syrk", fn, [Dep(a)])
+    g.nodes[nid].level = level
+    return nid
+
+
+def qt_sym_multiply(g: CTGraph, params: QTParams, s: Optional[int],
+                    b: Optional[int], side: str = "left") -> Optional[int]:
+    """C = S B (side='left') or C = B S (side='right'); S symmetric upper."""
+    if g.is_nil(s) or g.is_nil(b):
+        return None
+    sc: MatrixChunk = g.value_of(s)
+    bc: MatrixChunk = g.value_of(b)
+    assert sc.upper and not bc.upper
+    level = _level_of(params, sc.n)
+
+    if sc.is_leaf:
+        stats = LeafStats()
+
+        def fn(sv: MatrixChunk, bv: MatrixChunk):
+            res = leaf_sym_multiply(sv.leaf, bv.leaf, side=side, stats=stats)
+            if res.is_zero():
+                return None
+            return MatrixChunk(sv.n, leaf=res)
+
+        nid = g.register_task("sym_multiply", fn, [Dep(s), Dep(b)])
+        g.nodes[nid].flops = stats.flops
+        g.nodes[nid].level = level
+        return nid
+
+    def fn(sv: MatrixChunk, bv: MatrixChunk):
+        s00, s01, _, s11 = sv.children
+        b00, b01, b10, b11 = bv.children
+        if side == "left":      # C = S B;  S10 = S01ᵀ implicit
+            c00 = qt_add(g, params,
+                         qt_sym_multiply(g, params, s00, b00, "left"),
+                         qt_multiply(g, params, s01, b10))
+            c01 = qt_add(g, params,
+                         qt_sym_multiply(g, params, s00, b01, "left"),
+                         qt_multiply(g, params, s01, b11))
+            c10 = qt_add(g, params,
+                         qt_multiply(g, params, s01, b00, ta=True),
+                         qt_sym_multiply(g, params, s11, b10, "left"))
+            c11 = qt_add(g, params,
+                         qt_multiply(g, params, s01, b01, ta=True),
+                         qt_sym_multiply(g, params, s11, b11, "left"))
+        else:                    # C = B S
+            c00 = qt_add(g, params,
+                         qt_sym_multiply(g, params, s00, b00, "right"),
+                         qt_multiply(g, params, b01, s01, tb=True))
+            c01 = qt_add(g, params,
+                         qt_multiply(g, params, b00, s01),
+                         qt_sym_multiply(g, params, s11, b01, "right"))
+            c10 = qt_add(g, params,
+                         qt_sym_multiply(g, params, s00, b10, "right"),
+                         qt_multiply(g, params, b11, s01, tb=True))
+            c11 = qt_add(g, params,
+                         qt_multiply(g, params, b10, s01),
+                         qt_sym_multiply(g, params, s11, b11, "right"))
+        return Alias(_register_create(g, sv.n, (c00, c01, c10, c11), False,
+                                      level))
+
+    nid = g.register_task("sym_multiply", fn, [Dep(s), Dep(b)])
+    g.nodes[nid].level = level
+    return nid
+
+
+# ---------------------------------------------------------------------------
+# Counting utilities (Figs 3-4)
+# ---------------------------------------------------------------------------
+
+MULTIPLY_KINDS = ("multiply", "sym_square", "syrk", "sym_multiply")
+
+
+def count_tasks_per_level(g: CTGraph, kinds=MULTIPLY_KINDS
+                          ) -> dict[int, int]:
+    out: dict[int, int] = {}
+    for n in g.nodes:
+        if n.kind in kinds and n.level >= 0:
+            out[n.level] = out.get(n.level, 0) + 1
+    return out
+
+
+def total_multiply_tasks(g: CTGraph) -> int:
+    return sum(1 for n in g.nodes if n.kind in MULTIPLY_KINDS)
+
+
+def total_add_tasks(g: CTGraph) -> int:
+    return sum(1 for n in g.nodes if n.kind == "add")
+
+
+def total_flops(g: CTGraph) -> float:
+    return sum(n.flops for n in g.nodes)

@@ -1,0 +1,252 @@
+"""Quadtree representation of matrices in the Chunks and Tasks model (paper §3).
+
+Matrices are sparse quadtrees of chunks: at every non-leaf level a matrix
+chunk holds the chunk identifiers of its four submatrices (NIL for zero
+submatrices — possible at *any* level); at the lowest level a block-sparse
+:class:`~repro.core.leaf.LeafMatrix` is stored.  Matrix chunks carry their own
+dimension and the leaf-dimension threshold but no global information (offsets
+etc.), exactly as in §3.1.
+
+Construction itself is a task program (paper §7: "generation of input matrices
+... was performed using Chunks and Tasks programs"), so in the cluster
+simulation the *data distribution of the inputs follows from work stealing*,
+which is what makes the communication measurements of Figs 11-13 meaningful.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import numpy as np
+
+from .chunks import Chunk
+from .leaf import LeafMatrix
+from .tasks import CTGraph, Dep
+
+
+@dataclasses.dataclass(frozen=True)
+class QTParams(Chunk):
+    """Matrix-parameters chunk type (§3.1): dims + leaf config."""
+    n: int          # global matrix dimension (power-of-two multiple of leaf_n)
+    leaf_n: int     # max leaf matrix dimension
+    bs: int         # internal blocksize of the block-sparse leaf type
+
+    def nbytes(self) -> int:
+        return 24
+
+    @property
+    def levels(self) -> int:
+        """Number of quadtree levels below the root (root = level 0)."""
+        lv = 0
+        n = self.n
+        while n > self.leaf_n:
+            n //= 2
+            lv += 1
+        return lv
+
+
+class MatrixChunk(Chunk):
+    """Basic matrix chunk (§3.1): leaf payload or 4 child chunk identifiers."""
+
+    __slots__ = ("n", "leaf", "children", "upper")
+
+    def __init__(self, n: int, leaf: Optional[LeafMatrix] = None,
+                 children: Optional[tuple] = None, upper: bool = False):
+        self.n = n
+        self.leaf = leaf
+        self.children = children  # (c00, c01, c10, c11) node ids or None
+        self.upper = upper
+
+    @property
+    def is_leaf(self) -> bool:
+        return self.leaf is not None
+
+    def child(self, m: int, n: int) -> Optional[int]:
+        """Child chunk identifier at block-row m, block-col n (0-based)."""
+        return self.children[2 * m + n]
+
+    def nbytes(self) -> int:
+        if self.leaf is not None:
+            return self.leaf.nbytes()
+        return 64  # four identifiers + dimension info
+
+
+# ---------------------------------------------------------------------------
+# Construction task programs
+# ---------------------------------------------------------------------------
+
+def qt_from_dense(g: CTGraph, a: np.ndarray, params: QTParams,
+                  upper: bool = False, tol: float = 0.0) -> Optional[int]:
+    """Register the task tree that builds the quadtree for dense ``a``.
+
+    Returns the root chunk's node id, or None (NIL) for an all-zero matrix.
+    ``upper=True`` builds symmetric upper-triangular storage: the strictly
+    lower quadrant is NIL at every level and leaves use upper block storage
+    (block rows i <= j kept; diagonal blocks stored full and symmetric).
+    ``a`` must then be the full symmetric matrix.
+    """
+    assert a.shape == (params.n, params.n)
+
+    def build(sub: np.ndarray, up: bool) -> Optional[int]:
+        n = sub.shape[0]
+        if not np.any(np.abs(sub) > tol):
+            return None
+        if n <= params.leaf_n:
+            leaf = LeafMatrix.from_dense(sub, params.bs, upper=up, tol=tol)
+            if leaf.is_zero():
+                return None
+            return g.register_task(
+                "create", lambda lf=leaf, nn=n, uu=up: MatrixChunk(
+                    nn, leaf=lf, upper=uu), [])
+
+        def fn() -> MatrixChunk:
+            h = n // 2
+            c00 = build(sub[:h, :h], up)
+            c01 = build(sub[:h, h:], False)
+            c10 = None if up else build(sub[h:, :h], False)
+            c11 = build(sub[h:, h:], up)
+            return MatrixChunk(n, children=(c00, c01, c10, c11), upper=up)
+
+        return g.register_task("create", fn, [])
+
+    return build(a, upper)
+
+
+def qt_from_coo(g: CTGraph, rows: np.ndarray, cols: np.ndarray,
+                params: QTParams,
+                value_fn: Optional[Callable] = None,
+                upper: bool = False) -> Optional[int]:
+    """Build a quadtree from nonzero coordinates without a dense matrix.
+
+    ``value_fn(r, c) -> np.ndarray`` produces deterministic element values for
+    index arrays; defaults to a hash-based pseudo-random generator so tests
+    at paper-scale dimensions need no O(n^2) memory.
+    """
+    if value_fn is None:
+        def value_fn(r, c):
+            h = (r.astype(np.uint64) * np.uint64(2654435761)
+                 ^ c.astype(np.uint64) * np.uint64(40503)) & np.uint64(0xFFFF)
+            return (h.astype(np.float64) / 65535.0) - 0.5
+
+    if upper:
+        # keep whole upper-triangle *blocks*: diagonal leaf blocks stay full
+        keep = (cols // params.bs) >= (rows // params.bs)
+        rows, cols = rows[keep], cols[keep]
+
+    def build(r: np.ndarray, c: np.ndarray, n: int, r0: int, c0: int,
+              up: bool) -> Optional[int]:
+        if len(r) == 0:
+            return None
+        if n <= params.leaf_n:
+            rr, cc = r - r0, c - c0
+            vals = value_fn(r, c)
+
+            def mk(rr=rr, cc=cc, vals=vals, nn=n, uu=up) -> MatrixChunk:
+                leaf = LeafMatrix(nn, params.bs, upper=uu)
+                bi, bj = rr // params.bs, cc // params.bs
+                order = np.lexsort((cc, rr))
+                for t in order:
+                    key = (int(bi[t]), int(bj[t]))
+                    blk = leaf.blocks.get(key)
+                    if blk is None:
+                        blk = np.zeros((params.bs, params.bs))
+                        leaf.blocks[key] = blk
+                    blk[rr[t] % params.bs, cc[t] % params.bs] = vals[t]
+                return MatrixChunk(nn, leaf=leaf, upper=uu)
+
+            return g.register_task("create", mk, [])
+
+        def fn() -> MatrixChunk:
+            h = n // 2
+            top = r < r0 + h
+            left = c < c0 + h
+            c00 = build(r[top & left], c[top & left], h, r0, c0, up)
+            c01 = build(r[top & ~left], c[top & ~left], h, r0, c0 + h, False)
+            c10 = None if up else build(r[~top & left], c[~top & left],
+                                        h, r0 + h, c0, False)
+            c11 = build(r[~top & ~left], c[~top & ~left], h, r0 + h, c0 + h,
+                        up)
+            return MatrixChunk(n, children=(c00, c01, c10, c11), upper=up)
+
+        return g.register_task("create", fn, [])
+
+    return build(np.asarray(rows), np.asarray(cols), params.n, 0, 0, upper)
+
+
+# ---------------------------------------------------------------------------
+# Readback / stats (host-side; not part of the task program)
+# ---------------------------------------------------------------------------
+
+def qt_to_dense(g: CTGraph, nid: Optional[int], params: QTParams
+                ) -> np.ndarray:
+    """Read a quadtree matrix back to dense.
+
+    Symmetric upper-storage trees are expanded to the full symmetric matrix
+    (the lower quadrant at each level is the transpose of the stored upper
+    one; upper-storage leaves expand to full symmetric leaves).
+    """
+    def read(nid: Optional[int], n: int) -> np.ndarray:
+        chunk: Optional[MatrixChunk] = g.value_of(nid)
+        if chunk is None:
+            return np.zeros((n, n))
+        if chunk.is_leaf:
+            return chunk.leaf.to_dense()  # full symmetric when upper storage
+        out = np.zeros((n, n))
+        h = n // 2
+        out[:h, :h] = read(chunk.child(0, 0), h)
+        out[:h, h:] = read(chunk.child(0, 1), h)
+        out[h:, h:] = read(chunk.child(1, 1), h)
+        if chunk.upper:
+            out[h:, :h] = out[:h, h:].T
+        else:
+            out[h:, :h] = read(chunk.child(1, 0), h)
+        return out
+
+    return read(nid, params.n)
+
+
+def qt_stats(g: CTGraph, nid: Optional[int]) -> dict:
+    """Leaf blocks / bytes / max depth of a quadtree matrix."""
+    out = {"leaf_chunks": 0, "internal_chunks": 0, "nnz_blocks": 0,
+           "bytes": 0, "depth": 0}
+
+    def walk(nid: Optional[int], depth: int) -> None:
+        chunk: Optional[MatrixChunk] = g.value_of(nid)
+        if chunk is None:
+            return
+        out["depth"] = max(out["depth"], depth)
+        out["bytes"] += chunk.nbytes()
+        if chunk.is_leaf:
+            out["leaf_chunks"] += 1
+            out["nnz_blocks"] += chunk.leaf.n_nonzero_blocks()
+            return
+        out["internal_chunks"] += 1
+        for c in chunk.children:
+            walk(c, depth + 1)
+
+    walk(nid, 0)
+    return out
+
+
+def qt_frob2(g: CTGraph, nid: Optional[int]) -> float:
+    chunk: Optional[MatrixChunk] = g.value_of(nid)
+    if chunk is None:
+        return 0.0
+    if chunk.is_leaf:
+        if not chunk.upper:
+            return chunk.leaf.frob2()
+        tot = 0.0
+        for (i, j), blk in chunk.leaf.blocks.items():
+            w = float((blk * blk).sum())
+            tot += w if i == j else 2 * w
+        return tot
+    tot = 0.0
+    for idx, c in enumerate(chunk.children):
+        w = qt_frob2(g, c)
+        if chunk.upper and idx == 1:  # off-diagonal counted twice
+            w *= 2
+        tot += w
+    return tot
+
+
+_ = Dep  # re-export convenience for callers building custom task programs

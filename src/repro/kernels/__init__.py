@@ -1,0 +1,7 @@
+"""Pallas TPU kernels for the perf-critical compute of the paper.
+
+batched_gemm   — the leaf engine (paper §4.1 / Table 2)
+bsmm_pairs     — fused gather-GEMM-scatter over surviving block pairs
+banded_attention — the paper's banded case applied to sliding-window attention
+"""
+from .ops import banded_attention, batched_gemm, bsmm_pairs  # noqa: F401

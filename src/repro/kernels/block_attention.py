@@ -1,0 +1,119 @@
+"""Pallas TPU kernel: banded (sliding-window) block-sparse flash attention.
+
+The paper's banded-matrix case (§5.1, eq (8)) applied to attention: a
+sliding window of W key positions makes the (query x key) score matrix a
+banded block-sparse matrix, so the quadtree/locality analysis transfers —
+each query block touches only W/BQ + 1 key blocks, independent of sequence
+length, giving the O(N) total work of eq (11) instead of O(N^2).
+
+Implementation is a flash-style online-softmax kernel:
+  grid = (heads, S/BQ, W/BKV + 1); the third axis walks the band.
+  The k/v BlockSpec index maps clamp out-of-range band positions to block 0
+  and the in-kernel mask kills their contribution.
+  Running max/denominator/accumulator live in VMEM scratch; output is
+  flushed on the band's last step.
+
+VMEM budget per step: q,k,v,o slabs (4 * BQ * D * 4B) + scratch
+(BQ * (D + 2) * 4B); BQ = BKV = 128, D = 128 -> ~0.3 MiB.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_NEG = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+            n_kv_blocks: int, left: int, n_blocks: int, block_q: int,
+            block_kv: int, window: int, causal: bool):
+    iq = pl.program_id(1)
+    jk = pl.program_id(2)
+
+    @pl.when(jk == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, _NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    jk_abs = iq - left + jk                  # absolute kv block index
+    q = q_ref[0].astype(jnp.float32)
+    k = k_ref[0].astype(jnp.float32)
+    scale = 1.0 / (q.shape[-1] ** 0.5)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+
+    qpos = iq * block_q + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+    kpos = jk_abs * block_kv + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    mask = ((jk_abs >= 0) & (jk_abs < n_blocks)
+            & (qpos - kpos < window) & (kpos - qpos < window))
+    if causal:
+        mask = mask & (kpos <= qpos)
+    s = jnp.where(mask, s, _NEG)
+
+    m_prev = m_ref[...]
+    l_prev = l_ref[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.where(mask, jnp.exp(s - m_new), 0.0)
+    l_new = alpha * l_prev + p.sum(axis=-1, keepdims=True)
+    v = v_ref[0].astype(jnp.float32)
+    acc_ref[...] = alpha * acc_ref[...] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+    l_ref[...] = l_new
+
+    @pl.when(jk == n_kv_blocks - 1)
+    def _flush():
+        o_ref[0] = (acc_ref[...] / (l_ref[...] + 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "window", "block_q", "block_kv", "causal", "interpret"))
+def banded_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                     window: int, block_q: int = 128, block_kv: int = 128,
+                     causal: bool = True, interpret: bool = False
+                     ) -> jax.Array:
+    """Sliding-window attention; q, k, v: (H, S, D) -> (H, S, D).
+
+    ``window`` counts positions to each side (causal keeps the left side
+    only), matching kernels/ref.py::banded_attention_ref.
+    """
+    h, s, d = q.shape
+    assert block_q == block_kv, "kernel assumes square q/kv blocks"
+    assert s % block_q == 0 and s % block_kv == 0
+    assert window % block_kv == 0, "window must be a multiple of block_kv"
+    left = window // block_kv
+    n_kv_blocks = left + 1 if causal else 2 * left + 1
+    n_blocks = s // block_kv
+
+    kernel = functools.partial(
+        _kernel, n_kv_blocks=n_kv_blocks, left=left, n_blocks=n_blocks,
+        block_q=block_q, block_kv=block_kv, window=window, causal=causal)
+
+    def kv_index(hh, iq, jk):
+        jk_abs = iq - left + jk
+        return (hh, jnp.clip(jk_abs, 0, n_blocks - 1), 0)
+
+    return pl.pallas_call(
+        kernel,
+        grid=(h, s // block_q, n_kv_blocks),
+        in_specs=[
+            pl.BlockSpec((1, block_q, d), lambda hh, iq, jk: (hh, iq, 0)),
+            pl.BlockSpec((1, block_kv, d), kv_index),
+            pl.BlockSpec((1, block_kv, d), kv_index),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, d),
+                               lambda hh, iq, jk: (hh, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((h, s, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

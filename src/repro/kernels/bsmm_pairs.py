@@ -1,0 +1,82 @@
+"""Pallas TPU kernel: gather-GEMM-scatter over block pairs (DESIGN.md §3).
+
+This is the fused TPU rendering of steps 2-4 of the block-sparse multiply
+(core/bsmm.py): for every surviving (A-slot, B-slot, C-slot) triple, gather
+the two bs x bs blocks from the packed HBM arrays, multiply on the MXU, and
+accumulate into the C slot.
+
+TPU adaptation of the paper's leaf engine (§4.1): instead of cuBLAS batched
+gemm + host-side scatter, we use **scalar prefetch** — the slot-id arrays
+arrive in SMEM *before* the kernel body runs, and the BlockSpec index maps
+read them to steer the HBM->VMEM DMA of each grid step.  Gather therefore
+costs exactly one block DMA per pair (no materialized gathered copy in HBM),
+and the Pallas pipeline overlaps pair p+1's DMA with pair p's MXU work —
+the paper's §4.2 transfer/compute overlap, structurally.
+
+Accumulation requirement: ``seg`` (output slot per pair) must be sorted
+ascending, so all writes to one C block are consecutive grid steps; the
+kernel zeroes the VMEM accumulator on first visit (pl.when) and the final
+value is flushed to HBM when the output index map moves on.  Invalid /
+padding pairs carry seg == cap_c and land in a trailing garbage block that
+the wrapper slices off.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(sa_ref, sb_ref, seg_ref, a_ref, b_ref, o_ref):
+    p = pl.program_id(0)
+    seg_here = seg_ref[p]
+    seg_prev = seg_ref[jnp.maximum(p - 1, 0)]
+    first_visit = jnp.logical_or(p == 0, seg_here != seg_prev)
+
+    @pl.when(first_visit)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    prod = jax.lax.dot_general(
+        a_ref[0], b_ref[0],
+        dimension_numbers=(((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    ).astype(o_ref.dtype)
+    o_ref[...] += prod[None]
+
+
+@functools.partial(jax.jit, static_argnames=("cap_c", "interpret"))
+def bsmm_pairs(a_blocks: jax.Array, b_blocks: jax.Array,
+               sa: jax.Array, sb: jax.Array, seg: jax.Array, *,
+               cap_c: int, interpret: bool = False) -> jax.Array:
+    """Accumulate C[seg[p]] += A[sa[p]] @ B[sb[p]] over all pairs.
+
+    a_blocks : (capA, bs, bs); b_blocks : (capB, bs, bs)
+    sa, sb   : (P,) int32 slot ids (clamped to valid range by caller)
+    seg      : (P,) int32 ascending; cap_c marks invalid pairs
+    returns  : (cap_c, bs, bs) accumulated C blocks (a_blocks.dtype)
+    """
+    (p_cnt,) = sa.shape
+    bs = a_blocks.shape[1]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(p_cnt,),
+        in_specs=[
+            pl.BlockSpec((1, bs, bs),
+                         lambda p, sa_r, sb_r, seg_r: (sa_r[p], 0, 0)),
+            pl.BlockSpec((1, bs, bs),
+                         lambda p, sa_r, sb_r, seg_r: (sb_r[p], 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bs, bs),
+                               lambda p, sa_r, sb_r, seg_r: (seg_r[p], 0, 0)),
+    )
+    out = pl.pallas_call(
+        _kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((cap_c + 1, bs, bs), a_blocks.dtype),
+        interpret=interpret,
+    )(sa, sb, jnp.minimum(seg, cap_c), a_blocks, b_blocks)
+    return out[:cap_c]

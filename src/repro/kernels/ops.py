@@ -1,0 +1,73 @@
+"""Jit'd public wrappers around the Pallas kernels with XLA fallbacks.
+
+``use_pallas=None`` (default) selects the Pallas kernel on TPU and the XLA
+reference elsewhere; ``interpret=True`` runs the kernel bodies in Python on
+CPU (how kernels are validated in this repo's tests).  The contract of each
+op is defined by kernels/ref.py.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .batched_gemm import batched_gemm as _batched_gemm_kernel
+from .block_attention import banded_attention as _banded_attention_kernel
+from .bsmm_pairs import bsmm_pairs as _bsmm_pairs_kernel
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def batched_gemm(a: jax.Array, b: jax.Array, *, block_t: int = 8,
+                 use_pallas: Optional[bool] = None,
+                 interpret: bool = False) -> jax.Array:
+    """C[p] = A[p] @ B[p]; (P, bs, bs) each."""
+    if use_pallas is None:
+        use_pallas = _on_tpu()
+    if not use_pallas:
+        return ref.batched_gemm_ref(a, b)
+    p = a.shape[0]
+    bt = block_t
+    while p % bt:
+        bt //= 2
+    return _batched_gemm_kernel(a, b, block_t=max(bt, 1),
+                                interpret=interpret)
+
+
+def bsmm_pairs(a_blocks: jax.Array, b_blocks: jax.Array, sa: jax.Array,
+               sb: jax.Array, seg: jax.Array, *, cap_c: int,
+               use_pallas: Optional[bool] = None,
+               interpret: bool = False) -> jax.Array:
+    """C[seg[p]] += A[sa[p]] @ B[sb[p]]; seg ascending, cap_c = invalid."""
+    if use_pallas is None:
+        use_pallas = _on_tpu()
+    if not use_pallas:
+        return ref.bsmm_pairs_ref(a_blocks, b_blocks, sa, sb, seg, cap_c)
+    sa = jnp.clip(sa, 0, a_blocks.shape[0] - 1)
+    sb = jnp.clip(sb, 0, b_blocks.shape[0] - 1)
+    out = _bsmm_pairs_kernel(a_blocks, b_blocks, sa, sb, seg,
+                             cap_c=cap_c, interpret=interpret)
+    # C slots that received no pair were never visited by the kernel: zero
+    # them explicitly (segment_sum in the ref does this implicitly).
+    visited = jnp.zeros((cap_c + 1,), bool).at[jnp.minimum(seg, cap_c)].set(
+        True)[:cap_c]
+    return jnp.where(visited[:, None, None], out, 0)
+
+
+def banded_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                     window: int, block_q: int = 128, block_kv: int = 128,
+                     causal: bool = True,
+                     use_pallas: Optional[bool] = None,
+                     interpret: bool = False) -> jax.Array:
+    """Sliding-window attention, (H, S, D) -> (H, S, D)."""
+    if use_pallas is None:
+        use_pallas = _on_tpu()
+    if not use_pallas:
+        return ref.banded_attention_ref(q, k, v, window, causal=causal)
+    return _banded_attention_kernel(
+        q, k, v, window=window, block_q=block_q, block_kv=block_kv,
+        causal=causal, interpret=interpret)

@@ -1,0 +1,49 @@
+"""Pure-jnp oracles for every Pallas kernel (the ref side of kernel tests)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def batched_gemm_ref(a: jax.Array, b: jax.Array) -> jax.Array:
+    """(P, bs, bs) @ (P, bs, bs) -> (P, bs, bs), f32 accumulation."""
+    return jnp.einsum("pik,pkj->pij", a, b,
+                      preferred_element_type=jnp.float32).astype(a.dtype)
+
+
+def bsmm_pairs_ref(a_blocks: jax.Array, b_blocks: jax.Array,
+                   sa: jax.Array, sb: jax.Array, seg: jax.Array,
+                   cap_c: int) -> jax.Array:
+    """Gather-GEMM-scatter oracle.
+
+    a_blocks : (capA, bs, bs) packed A blocks
+    b_blocks : (capB, bs, bs) packed B blocks
+    sa, sb   : (P,) slot ids per pair (invalid pairs may point anywhere)
+    seg      : (P,) output slot per pair, ascending; cap_c marks invalid
+    returns  : (cap_c, bs, bs) accumulated C blocks
+    """
+    prods = batched_gemm_ref(a_blocks[sa], b_blocks[sb])
+    prods = jnp.where((seg < cap_c)[:, None, None], prods, 0)
+    seg = jnp.minimum(seg, cap_c)
+    out = jax.ops.segment_sum(prods.astype(jnp.float32), seg,
+                              num_segments=cap_c + 1)[:cap_c]
+    return out.astype(a_blocks.dtype)
+
+
+def banded_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                         window: int, causal: bool = True) -> jax.Array:
+    """Sliding-window attention oracle.
+
+    q, k, v : (H, S, D); window counts key positions attended to the left
+    (inclusive of self): position i attends keys in [i-window+1, i]
+    (causal) or |i - j| < window (bidirectional).
+    """
+    h, s, d = q.shape
+    scores = jnp.einsum("hqd,hkd->hqk", q, k) / jnp.sqrt(d).astype(q.dtype)
+    qi = jnp.arange(s)[:, None]
+    kj = jnp.arange(s)[None, :]
+    band = (qi - kj < window) & (qi - kj > -window)
+    mask = band & (kj <= qi) if causal else band
+    scores = jnp.where(mask[None], scores.astype(jnp.float32), -jnp.inf)
+    probs = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("hqk,hkd->hqd", probs.astype(q.dtype), v)

@@ -1,0 +1,32 @@
+"""Production meshes.
+
+Mesh factories are FUNCTIONS so importing this module never touches jax
+device state (device count is locked at first jax init; the dry-run sets
+XLA_FLAGS before importing anything that imports jax).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 single-pod (256 chips) or 2x16x16 multi-pod (512 chips)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_spmm_mesh(n_dev: int, *, axis: str = "dev"):
+    """1-D mesh for the distributed block-sparse matmul engine."""
+    return jax.make_mesh((n_dev,), (axis,))
+
+
+def make_summa_mesh(pgrid: int):
+    """2-D process grid for the SpSUMMA baseline."""
+    return jax.make_mesh((pgrid, pgrid), ("pr", "pc"))
+
+
+def data_axes(mesh) -> tuple[str, ...]:
+    """Axes that shard the batch (pod+data when multi-pod)."""
+    names = mesh.axis_names
+    return tuple(a for a in ("pod", "data") if a in names)

@@ -1,0 +1,67 @@
+"""Collate dry-run JSONs into the EXPERIMENTS.md §Dry-run/§Roofline tables.
+
+    PYTHONPATH=src python -m repro.launch.report experiments/dryrun
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import sys
+
+
+def load(outdir) -> list[dict]:
+    rows = []
+    for p in sorted(pathlib.Path(outdir).glob("*.json")):
+        rows.append(json.loads(p.read_text()))
+    return rows
+
+
+def fmt_mem(r) -> str:
+    m = r["mem"]
+    return (f"{m['argument_bytes']/2**30:.2f}+{m['temp_bytes']/2**30:.2f}"
+            f"={m['peak_bytes']/2**30:.2f}")
+
+
+def dryrun_table(rows) -> str:
+    out = ["| arch | shape | mesh | compile | mem/dev GiB (args+temps) | "
+           "collectives (counts) |",
+           "|---|---|---|---|---|---|"]
+    for r in rows:
+        cc = r.get("collective_counts") or {}
+        cs = ", ".join(f"{k.replace('collective-','c-')}:{v}"
+                       for k, v in cc.items()) or "-"
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+            f"{r['t_compile_s']:.0f}s | {fmt_mem(r)} | {cs} |")
+    return "\n".join(out)
+
+
+def roofline_table(rows) -> str:
+    out = ["| arch | shape | t_comp ms | t_mem ms | t_coll ms | bound | "
+           "model GF | useful | MFU bound |",
+           "|---|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        if r["mesh"] != "16x16" or "roofline" not in r:
+            continue
+        rf = r["roofline"]
+        out.append(
+            f"| {r['arch']} | {r['shape']} | "
+            f"{rf['t_compute_s']*1e3:.2f} | {rf['t_memory_s']*1e3:.2f} | "
+            f"{rf['t_collective_s']*1e3:.2f} | {rf['bottleneck']} | "
+            f"{rf['model_gflops']:.0f} | "
+            f"{rf['useful_fraction']*100:.0f}% | "
+            f"{rf['mfu_bound']*100:.1f}% |")
+    return "\n".join(out)
+
+
+def main() -> None:
+    outdir = sys.argv[1] if len(sys.argv) > 1 else "experiments/dryrun"
+    rows = load(outdir)
+    print(f"## Dry-run ({len(rows)} cells)\n")
+    print(dryrun_table(rows))
+    print("\n## Roofline (single-pod 16x16)\n")
+    print(roofline_table(rows))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,168 @@
+"""Roofline terms from compiled dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+    compute term    = HLO_FLOPs      / (chips * peak_FLOP/s)
+    memory term     = HLO_bytes      / (chips * HBM_bw)
+    collective term = collective_bytes / (chips * link_bw)
+
+``cost_analysis()`` supplies FLOPs and bytes accessed.  Collective bytes are
+NOT in cost_analysis: :func:`collective_bytes` parses the optimized HLO text
+and sums the **result-shape bytes** of every collective op (all-gather,
+all-reduce, reduce-scatter, all-to-all, collective-permute; async *-start
+variants counted once, *-done skipped).  The result shape is the data
+landing on each participating device, which is the per-device traffic the
+ICI link must carry up to the O(1) factors noted per-op below:
+
+* collective-permute: result == bytes received (exact);
+* reduce-scatter:     result == shard received (exact);
+* all-gather:         result == full gathered buffer ~= received * g/(g-1);
+* all-reduce:         result == tensor; ring traffic is 2(g-1)/g * size,
+                      so the proxy is within 2x (we report the proxy).
+
+Hardware constants default to TPU v5e: 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI (values from the task brief).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Optional
+
+# bytes per element for HLO dtypes
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "s32": 4, "u32": 4,
+    "s64": 8, "u64": 8, "f16": 2, "bf16": 2, "f32": 4, "f64": 8,
+    "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# one shape, e.g. f32[8,56,8,8]{3,2,1,0:...} or bf16[1024]
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+
+# HLO instruction: `%name = <result-shape(s)> <opname>(operands...)`
+_INSTR_RE = re.compile(
+    r"=\s*(\([^=]*?\)|[a-z0-9]+\[[0-9,]*\](?:\{[^}]*\})?)\s*"
+    r"([a-z0-9\-]+)\(")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    if dtype not in _DTYPE_BYTES:
+        return 0
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+def _result_bytes(shapes: str) -> int:
+    """Bytes of the result shape(s) text (may be a tuple)."""
+    return sum(_shape_bytes(dt, dims)
+               for dt, dims in _SHAPE_RE.findall(shapes))
+
+
+def collective_bytes(hlo_text: str, per_op: bool = False):
+    """Sum result-shape bytes of every collective in optimized HLO text."""
+    totals: dict[str, int] = {c: 0 for c in _COLLECTIVES}
+    counts: dict[str, int] = {c: 0 for c in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        m = _INSTR_RE.search(line)
+        if not m:
+            continue
+        shapes, op = m.group(1), m.group(2)
+        if op.endswith("-done"):
+            continue
+        base = op[:-6] if op.endswith("-start") else op
+        if base in _COLLECTIVES:
+            totals[base] += _result_bytes(shapes)
+            counts[base] += 1
+    if per_op:
+        return totals, counts
+    return sum(totals.values())
+
+
+@dataclasses.dataclass
+class Hardware:
+    """Per-chip peaks (defaults: TPU v5e from the task brief)."""
+    peak_flops: float = 197e12       # bf16 FLOP/s
+    hbm_bw: float = 819e9            # B/s
+    link_bw: float = 50e9            # B/s per ICI link
+
+
+@dataclasses.dataclass
+class Roofline:
+    """Roofline terms.  SPMD modules report PER-DEVICE quantities (verified
+    empirically: cost_analysis()['flops'] of an 8-way-sharded matmul equals
+    2M^3/8), so flops/bytes here are per device and the terms below divide
+    by single-chip peaks.  Equivalently: global_FLOPs / (chips * peak)."""
+    flops: float                     # HLO flops per device
+    hbm_bytes: float                 # bytes accessed per device
+    coll_bytes: float                # collective bytes per device
+    n_chips: int
+    hw: Hardware
+    model_flops: float = 0.0         # 6*N*D-style useful flops (GLOBAL)
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops / self.hw.peak_flops
+
+    @property
+    def t_memory(self) -> float:
+        return self.hbm_bytes / self.hw.hbm_bw
+
+    @property
+    def t_collective(self) -> float:
+        return self.coll_bytes / self.hw.link_bw
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def t_bound(self) -> float:
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def useful_fraction(self) -> float:
+        """MODEL_FLOPS / global HLO_FLOPs — remat/redundancy waste."""
+        total = self.flops * self.n_chips
+        return self.model_flops / total if total else 0.0
+
+    @property
+    def mfu_bound(self) -> float:
+        """Model-flop utilization if execution hits t_bound exactly."""
+        if not self.model_flops or self.t_bound == 0:
+            return 0.0
+        return (self.model_flops
+                / (self.n_chips * self.hw.peak_flops * self.t_bound))
+
+    def row(self) -> dict:
+        return {
+            "t_compute_s": self.t_compute,
+            "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "bottleneck": self.bottleneck,
+            "dev_gflops": self.flops / 1e9,
+            "dev_hbm_gb": self.hbm_bytes / 1e9,
+            "dev_coll_gb": self.coll_bytes / 1e9,
+            "model_gflops": self.model_flops / 1e9,
+            "useful_fraction": self.useful_fraction,
+            "mfu_bound": self.mfu_bound,
+        }
+
+
+def from_compiled(compiled, n_chips: int, hw: Optional[Hardware] = None,
+                  model_flops: float = 0.0) -> Roofline:
+    """Build roofline terms from a jax compiled artifact (SPMD module)."""
+    hw = hw or Hardware()
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    flops = float(ca.get("flops", 0.0))
+    hbm = float(ca.get("bytes accessed", 0.0))
+    coll = float(collective_bytes(compiled.as_text()))
+    return Roofline(flops=flops, hbm_bytes=hbm, coll_bytes=coll,
+                    n_chips=n_chips, hw=hw, model_flops=model_flops)

@@ -1,0 +1,78 @@
+"""Serving driver: batched prefill + decode loop with KV/SSM caches.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch olmo-1b --smoke \
+        --batch 4 --prompt-len 32 --gen 16
+
+Implements the production decode loop shape-for-shape: requests are
+padded into a fixed batch, prefill fills the cache via teacher-forced
+decode steps (token-by-token; a fused prefill path exists via
+M.forward for the prefill_32k shape), then greedy decode.  On the real
+mesh the same builders lower to the decode_32k / long_500k cells of the
+dry-run.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, get_smoke_config
+from repro.models import model as M
+
+
+def generate(cfg, params, prompts: np.ndarray, gen: int, max_len: int
+             ) -> np.ndarray:
+    """prompts: (B, P) int32. Greedy decode ``gen`` tokens."""
+    b, plen = prompts.shape
+    cache = M.init_cache(cfg, b, max_len)
+    step = jax.jit(
+        lambda p, t, c, pos: M.decode_step(cfg, p, t, c, pos),
+        donate_argnums=(2,))
+    out = np.zeros((b, gen), np.int32)
+    tok = jnp.asarray(prompts[:, 0])
+    logits = None
+    for pos in range(plen + gen - 1):
+        logits, cache = step(params, tok, cache, jnp.int32(pos))
+        if pos + 1 < plen:
+            tok = jnp.asarray(prompts[:, pos + 1])      # teacher-forced
+        else:
+            tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            out[:, pos + 1 - plen] = np.asarray(tok)
+    return out
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = get_smoke_config(args.arch) if args.smoke else \
+        get_config(args.arch)
+    if cfg.is_encoder_only:
+        raise SystemExit("encoder-only arch has no decode step")
+    params = M.init_params(cfg, jax.random.PRNGKey(args.seed))
+    rng = np.random.default_rng(args.seed)
+    prompts = rng.integers(0, cfg.vocab,
+                           (args.batch, args.prompt_len)).astype(np.int32)
+    t0 = time.time()
+    out = generate(cfg, params, prompts, args.gen,
+                   args.prompt_len + args.gen)
+    dt = time.time() - t0
+    tput = args.batch * args.gen / dt
+    print(f"arch={cfg.name} batch={args.batch} gen={args.gen} "
+          f"-> {tput:.1f} tok/s ({dt:.1f}s)")
+    print("sample:", out[0].tolist())
+    assert np.isfinite(tput) and (out >= 0).all() and (out < cfg.vocab).all()
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,368 @@
+"""Parameter/activation sharding rules and train/serve step builders.
+
+Name-based partition rules (MaxText-style logical axes, simplified):
+tensor-parallel over the ``model`` axis for the big projection dims,
+batch over ``data`` (+ ``pod`` when multi-pod), optional ZeRO-1 sharding
+of optimizer moments over the data axis.
+
+Shardings may be uneven (e.g. llama's 24 q-heads, internvl's odd vocab);
+GSPMD pads internally — fine for jit, which is why the model layer uses
+jit + sharding rules rather than shard_map.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models import model as M
+from repro.models.config import ModelConfig, ShapeSpec, input_specs
+from repro.optim import adamw_init, adamw_update, clip_by_global_norm, \
+    cosine_schedule
+
+MODEL_AXIS = "model"
+
+
+def _trailing_rule(cfg: ModelConfig, name: str, shape: tuple
+                   ) -> tuple:
+    """PartitionSpec entries for the trailing (non-stack) dims of a param."""
+    mdl = MODEL_AXIS
+    if cfg.n_experts and name in ("w_gate", "w_up", "w_down"):
+        # (E, d, ff) / (E, ff, d): expert-parallel when E divides the axis,
+        # else shard the ff dim inside every expert
+        if name in ("w_gate", "w_up"):
+            return (mdl, None, None) if cfg.n_experts % 16 == 0 \
+                else (None, None, mdl)
+        return (mdl, None, None) if cfg.n_experts % 16 == 0 \
+            else (None, mdl, None)
+    rules = {
+        "embed": (mdl, None),
+        "unembed": (mdl, None),
+        "patch_proj": (None, None),
+        "final_norm": (None,),
+        "wq": (None, mdl), "wk": (None, mdl), "wv": (None, mdl),
+        "wo": (mdl, None),
+        "w_gate": (None, mdl), "w_up": (None, mdl), "w_down": (mdl, None),
+        "w1": (None, mdl), "w2": (mdl, None),
+        "router": (None, None),
+        "in_proj": (None, mdl),
+        "out_proj": (mdl, None),
+        "x_proj": (mdl, None),
+        "dt_proj": (None, mdl),
+        "conv": (mdl, None),
+        "norm_scale": (mdl,),
+        "norm_attn": (None,), "norm_mlp": (None,), "norm_mixer": (None,),
+        "dt_bias": (mdl,),
+        "D": (mdl,),
+    }
+    if name == "A_log":
+        return (mdl, None) if len(shape) >= 2 and \
+            shape[-1] == cfg.ssm_state and cfg.mixer == "mamba1" else (mdl,)
+    if name in rules:
+        return rules[name]
+    return tuple(None for _ in shape)
+
+
+def _axis_size(mesh: Mesh, entry) -> int:
+    if entry is None:
+        return 1
+    if isinstance(entry, (tuple, list)):
+        n = 1
+        for a in entry:
+            n *= mesh.shape[a]
+        return n
+    return mesh.shape[entry]
+
+
+def _fix_spec(mesh: Mesh, shape: tuple, spec: list) -> list:
+    """jit in_shardings require divisibility: move a sharded entry to
+    another divisible dim, else drop it (replicate)."""
+    spec = list(spec)
+    for i, entry in enumerate(spec):
+        if entry is None:
+            continue
+        if shape[i] % _axis_size(mesh, entry) == 0:
+            continue
+        # prefer trailing dims (hd, ff, ...) as the new home
+        for j in range(len(spec) - 1, -1, -1):
+            if spec[j] is None and \
+                    shape[j] % _axis_size(mesh, entry) == 0 and \
+                    shape[j] >= _axis_size(mesh, entry):
+                spec[j] = entry
+                break
+        spec[i] = None
+    return spec
+
+
+def param_spec(cfg: ModelConfig, path: tuple, shape: tuple,
+               mesh: Optional[Mesh] = None) -> P:
+    name = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
+    trailing = _trailing_rule(cfg, name, shape)
+    lead = len(shape) - len(trailing)
+    assert lead >= 0, (name, shape, trailing)
+    spec = [None] * lead + list(trailing)
+    if mesh is not None:
+        spec = _fix_spec(mesh, shape, spec)
+    return P(*spec)
+
+
+def param_shardings(cfg: ModelConfig, mesh: Mesh):
+    """NamedSharding pytree matching the params tree."""
+    abstract = M.abstract_params(cfg)
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: NamedSharding(
+            mesh, param_spec(cfg, path, leaf.shape, mesh)),
+        abstract)
+
+
+def zero1_shardings(cfg: ModelConfig, mesh: Mesh, data_axes: tuple):
+    """ZeRO-1: optimizer moments additionally sharded over the data axes on
+    the first dimension the param spec leaves unsharded AND divisible
+    (usually the layer stack) — each data replica owns a slice."""
+    abstract = M.abstract_params(cfg)
+    n_data = 1
+    for a in data_axes:
+        n_data *= mesh.shape[a]
+
+    def spec(path, leaf):
+        base = list(param_spec(cfg, path, leaf.shape, mesh))
+        for i, (entry, dim) in enumerate(zip(base, leaf.shape)):
+            if entry is None and dim % n_data == 0 and dim >= n_data:
+                base[i] = data_axes if len(data_axes) > 1 else data_axes[0]
+                break
+        return NamedSharding(mesh, P(*base))
+
+    return jax.tree_util.tree_map_with_path(spec, abstract)
+
+
+def batch_axes(mesh: Mesh) -> tuple:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+@dataclasses.dataclass
+class TrainStep:
+    """Compiled-step builder for one (cfg, mesh) pair.
+
+    * ``microbatch``: gradient-accumulation factor (scan over microbatches)
+      — bounds activation memory at B_device/microbatch per pass;
+    * gradients are pinned to the ZeRO sharding (data-axis sharded) via
+      with_sharding_constraint, so GSPMD emits reduce-scatter instead of
+      all-reduce for the DP gradient sync and the f32 gradient/moment
+      buffers are 1/|data| per device (ZeRO-1/2 style).
+    """
+    cfg: ModelConfig
+    mesh: Mesh
+    zero1: bool = True
+    microbatch: int = 0          # 0 = auto
+    peak_lr: float = 3e-4
+    warmup: int = 100
+    total_steps: int = 10000
+    clip_norm: float = 1.0
+
+    def auto_microbatch(self, shape: ShapeSpec) -> int:
+        """Pick accumulation so activations fit: target <= ~2 GiB of
+        layer-input remat buffers per device."""
+        if self.microbatch:
+            return self.microbatch
+        ax = batch_axes(self.mesh)
+        n_data = 1
+        for a in ax:
+            n_data *= self.mesh.shape[a]
+        b_dev = max(1, shape.global_batch // n_data)
+        cfg = self.cfg
+        n_stack = cfg.n_layers
+        bytes_per_b = shape.seq_len * cfg.d_model * 2 * n_stack
+        budget = 2 * 2 ** 30
+        micro = 1
+        while b_dev // micro > 1 and (b_dev // micro) * bytes_per_b > budget:
+            micro *= 2
+        return min(micro, b_dev)
+
+    def param_shardings(self):
+        return param_shardings(self.cfg, self.mesh)
+
+    def opt_shardings(self):
+        ps = self.param_shardings()
+        moments = zero1_shardings(self.cfg, self.mesh,
+                                  batch_axes(self.mesh)) if self.zero1 \
+            else ps
+        from repro.optim.adamw import AdamWState
+        return AdamWState(
+            step=NamedSharding(self.mesh, P()),
+            m=moments, v=jax.tree.map(lambda x: x, moments))
+
+    def batch_shardings(self, shape: ShapeSpec):
+        ax = batch_axes(self.mesh)
+        sh = NamedSharding(self.mesh, P(ax if len(ax) > 1 else ax[0]))
+        return input_specs(self.cfg, shape, batch_sharding=sh)
+
+    def step_fn(self, shape: Optional[ShapeSpec] = None):
+        cfg = self.cfg
+        micro = self.auto_microbatch(shape) if shape is not None else 1
+        if cfg.cost_mode:
+            micro = 1      # cost compiles measure one full-batch pass
+        grad_sh = zero1_shardings(cfg, self.mesh, batch_axes(self.mesh)) \
+            if self.zero1 else self.param_shardings()
+        grad_specs = jax.tree.map(lambda s: s.spec, grad_sh)
+
+        def grads_of(params, batch):
+            (loss, metrics), grads = jax.value_and_grad(
+                lambda p: M.loss_fn(cfg, p, batch), has_aux=True)(params)
+            # ZeRO: pin grads data-sharded -> GSPMD reduce-scatters the DP
+            # gradient sync and the f32 buffers are 1/|data| per device
+            grads = jax.tree.map(
+                lambda g, s: jax.lax.with_sharding_constraint(g, s),
+                grads, grad_sh)
+            return loss, metrics, grads
+
+        def step(params, opt_state, batch):
+            if micro <= 1:
+                loss, metrics, grads = grads_of(params, batch)
+            else:
+                def split(x):
+                    b = x.shape[0]
+                    return x.reshape(micro, b // micro, *x.shape[1:])
+
+                mb = jax.tree.map(split, batch)
+
+                def acc_step(carry, mbatch):
+                    g_acc, l_acc = carry
+                    loss, _, grads = grads_of(params, mbatch)
+                    g_acc = jax.tree.map(
+                        lambda a, g: a + g.astype(jnp.float32), g_acc,
+                        grads)
+                    return (g_acc, l_acc + loss), None
+
+                g0 = jax.tree.map(
+                    lambda p, s: jax.lax.with_sharding_constraint(
+                        jnp.zeros(p.shape, jnp.float32), s),
+                    params, grad_sh)
+                (grads, loss_sum), _ = jax.lax.scan(
+                    acc_step, (g0, jnp.zeros((), jnp.float32)), mb)
+                grads = jax.tree.map(lambda g: g / micro, grads)
+                loss = loss_sum / micro
+                metrics = {}
+            grads, gnorm = clip_by_global_norm(grads, self.clip_norm)
+            lr = cosine_schedule(opt_state.step, peak_lr=self.peak_lr,
+                                 warmup=self.warmup, total=self.total_steps)
+            params, opt_state = adamw_update(params, grads, opt_state,
+                                             lr=lr)
+            metrics = dict(metrics, loss=loss, grad_norm=gnorm, lr=lr)
+            return params, opt_state, metrics
+
+        return step
+
+    def jitted(self, shape: ShapeSpec, donate: bool = True):
+        ps = self.param_shardings()
+        os = self.opt_shardings()
+        bs = self.batch_shardings(shape)
+        bsh = jax.tree.map(lambda s: s.sharding, bs)
+        return jax.jit(
+            self.step_fn(shape),
+            in_shardings=(ps, os, bsh),
+            out_shardings=(ps, os, None),
+            donate_argnums=(0, 1) if donate else (),
+        )
+
+    def abstract_inputs(self, shape: ShapeSpec):
+        """ShapeDtypeStructs for (params, opt_state, batch) — dry-run."""
+        ps = self.param_shardings()
+        params = jax.tree.map(
+            lambda leaf, sh: jax.ShapeDtypeStruct(leaf.shape, leaf.dtype,
+                                                  sharding=sh),
+            M.abstract_params(self.cfg), ps)
+        os_sh = self.opt_shardings()
+        from repro.optim.adamw import AdamWState
+        opt = AdamWState(
+            step=jax.ShapeDtypeStruct((), jnp.int32,
+                                      sharding=os_sh.step),
+            m=jax.tree.map(lambda leaf, sh: jax.ShapeDtypeStruct(
+                leaf.shape, jnp.float32, sharding=sh),
+                M.abstract_params(self.cfg), os_sh.m),
+            v=jax.tree.map(lambda leaf, sh: jax.ShapeDtypeStruct(
+                leaf.shape, jnp.float32, sharding=sh),
+                M.abstract_params(self.cfg), os_sh.v))
+        batch = self.batch_shardings(shape)
+        return params, opt, batch
+
+
+@dataclasses.dataclass
+class ServeStep:
+    """Decode-step builder (one new token against a KV/SSM cache)."""
+    cfg: ModelConfig
+    mesh: Mesh
+    shape: ShapeSpec
+
+    def cache_shardings(self):
+        cfg, mesh = self.cfg, self.mesh
+        ax = batch_axes(mesh)
+        dax = ax if len(ax) > 1 else ax[0]
+        b = self.shape.global_batch
+        seq_sharded = b == 1        # long_500k: shard the sequence instead
+
+        def spec(name, shape):
+            if name in ("k", "v"):
+                # (L, B, T, KV, hd); when KV < |model| the fixup moves the
+                # model axis onto hd
+                if seq_sharded:
+                    base = [None, None, dax, MODEL_AXIS, None]
+                else:
+                    base = [None, dax, None, MODEL_AXIS, None]
+            elif name == "conv":
+                base = [None] * (len(shape) - 1) + [MODEL_AXIS]
+            elif name == "ssm":
+                # (L, B, di, N) mamba1 / (G, K, B, nh, hd, N) mamba2
+                base = [None] * len(shape)
+                base[2 if self.cfg.mixer == "mamba1" else 3] = MODEL_AXIS
+            else:
+                base = [None] * len(shape)
+            return P(*_fix_spec(mesh, shape, base))
+        cache = M.init_cache(cfg, b, self.shape.seq_len, abstract=True)
+        return {k: NamedSharding(mesh, spec(k, v.shape))
+                for k, v in cache.items()}
+
+    def abstract_inputs(self):
+        cfg, mesh = self.cfg, self.mesh
+        ax = batch_axes(mesh)
+        b = self.shape.global_batch
+        ps = param_shardings(cfg, mesh)
+        params = jax.tree.map(
+            lambda leaf, sh: jax.ShapeDtypeStruct(leaf.shape, leaf.dtype,
+                                                  sharding=sh),
+            M.abstract_params(cfg), ps)
+        csh = self.cache_shardings()
+        cache = {
+            k: jax.ShapeDtypeStruct(v.shape, v.dtype, sharding=csh[k])
+            for k, v in M.init_cache(cfg, b, self.shape.seq_len,
+                                     abstract=True).items()}
+        tok_sh = NamedSharding(
+            mesh, P(ax if len(ax) > 1 else ax[0]) if b > 1 else P())
+        token = jax.ShapeDtypeStruct((b,), jnp.int32, sharding=tok_sh)
+        pos = jax.ShapeDtypeStruct((), jnp.int32)
+        return params, token, cache, pos
+
+    def step_fn(self):
+        cfg = self.cfg
+
+        def step(params, token, cache, pos):
+            return M.decode_step(cfg, params, token, cache, pos)
+
+        return step
+
+    def jitted(self, donate: bool = True):
+        return jax.jit(self.step_fn(),
+                       donate_argnums=(2,) if donate else ())
+
+
+def make_prefill_fn(cfg: ModelConfig, mesh: Mesh):
+    """Full-sequence forward (inference-prefill shape)."""
+
+    def prefill(params, batch):
+        logits, _ = M.forward(cfg, params, batch, remat=False)
+        return logits
+
+    return jax.jit(prefill)

@@ -1,0 +1,2 @@
+from .config import (ModelConfig, ShapeSpec, ALL_SHAPES, SHAPES_BY_NAME,
+                     applicable_shapes, input_specs)  # noqa: F401

@@ -1,0 +1,324 @@
+"""Shared model layers: norms, RoPE, attention variants, MLP, MoE.
+
+Attention comes in three production paths:
+
+* ``chunked_attention`` — full (causal or bidirectional) attention computed
+  blockwise with an online softmax (lax.scan over kv chunks).  Peak
+  activation memory O(S * q_chunk) per head instead of O(S^2); this is the
+  XLA-native flash pattern used for train/prefill shapes.
+* ``windowed_attention`` — the paper's *banded block-sparse* case: each
+  query block gathers only the W/BQ + 1 key blocks inside the sliding
+  window, total work O(S * W) (eq (11)'s locality win applied to
+  attention).  kernels/block_attention.py is the Pallas twin.
+* ``decode_attention`` — single-position attention against a KV cache.
+
+All functions are batched with vmap at the call site where needed and keep
+f32 softmax numerics regardless of activation dtype.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+_NEG = -1e30
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def rms_norm(x: jax.Array, scale: Optional[jax.Array], eps: float = 1e-5
+             ) -> jax.Array:
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    out = x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)
+    if scale is not None:
+        out = out * (1.0 + scale.astype(jnp.float32))
+    return out.astype(x.dtype)
+
+
+def nonparam_layer_norm(x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    """OLMo's non-parametric LayerNorm: no scale, no bias."""
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    return ((xf - mu) * jax.lax.rsqrt(var + eps)).astype(x.dtype)
+
+
+def apply_norm(kind: str, x: jax.Array, scale: Optional[jax.Array]
+               ) -> jax.Array:
+    if kind == "nonparam_ln":
+        return nonparam_layer_norm(x)
+    return rms_norm(x, scale)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_frequencies(hd: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, hd, 2, dtype=jnp.float32) / hd))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float
+               ) -> jax.Array:
+    """x: (..., S, n_heads, hd); positions: (..., S)."""
+    hd = x.shape[-1]
+    freqs = rope_frequencies(hd, theta)                       # (hd/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, hd/2)
+    cos = jnp.cos(angles)[..., None, :]                        # head axis
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin],
+                          axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention variants
+# ---------------------------------------------------------------------------
+
+def _gqa_scores(q, k):
+    """q: (B, S, KV, G, hd), k: (B, T, KV, hd) -> (B, KV, G, S, T)."""
+    return jnp.einsum("bsvgh,btvh->bvgst", q, k,
+                      preferred_element_type=jnp.float32)
+
+
+def chunked_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                      causal: bool, q_chunk: int = 512,
+                      kv_chunk: int = 1024,
+                      unroll: bool = False) -> jax.Array:
+    """Flash-pattern full attention.
+
+    q: (B, S, KV, G, hd); k, v: (B, S, KV, hd).  Returns (B, S, KV, G, hd).
+    Memory per step: O(q_chunk * kv_chunk) scores per (KV, G).
+    """
+    b, s, kvh, g, hd = q.shape
+    t = k.shape[1]
+    q_chunk = min(q_chunk, s)
+    kv_chunk = min(kv_chunk, t)
+    assert s % q_chunk == 0 and t % kv_chunk == 0
+    nq, nk = s // q_chunk, t // kv_chunk
+    scale = 1.0 / (hd ** 0.5)
+
+    qs = q.reshape(b, nq, q_chunk, kvh, g, hd)
+    ks = k.reshape(b, nk, kv_chunk, kvh, hd)
+    vs = v.reshape(b, nk, kv_chunk, kvh, hd)
+
+    def q_step(_, iq):
+        qi = qs[:, iq] * scale        # (B, qc, KV, G, hd)
+
+        def kv_step(carry, jk):
+            m, l, acc = carry
+            kj = ks[:, jk]
+            vj = vs[:, jk]
+            s_ij = jnp.einsum("bqvgh,bkvh->bvgqk", qi, kj,
+                              preferred_element_type=jnp.float32)
+            if causal:
+                qpos = iq * q_chunk + jnp.arange(q_chunk)[:, None]
+                kpos = jk * kv_chunk + jnp.arange(kv_chunk)[None, :]
+                s_ij = jnp.where(qpos >= kpos, s_ij, _NEG)
+            m_new = jnp.maximum(m, s_ij.max(-1))
+            alpha = jnp.exp(m - m_new)
+            p = jnp.exp(s_ij - m_new[..., None])
+            l_new = alpha * l + p.sum(-1)
+            acc_new = alpha[..., None] * acc + jnp.einsum(
+                "bvgqk,bkvh->bvgqh", p, vj.astype(jnp.float32))
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((b, kvh, g, q_chunk), _NEG, jnp.float32)
+        l0 = jnp.zeros((b, kvh, g, q_chunk), jnp.float32)
+        a0 = jnp.zeros((b, kvh, g, q_chunk, hd), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0),
+                                      jnp.arange(nk), unroll=unroll)
+        out = acc / (l[..., None] + 1e-30)       # (B, KV, G, qc, hd)
+        return None, out.transpose(0, 3, 1, 2, 4).astype(q.dtype)
+
+    _, chunks = jax.lax.scan(q_step, None, jnp.arange(nq), unroll=unroll)
+    # chunks: (nq, B, qc, KV, G, hd)
+    return chunks.transpose(1, 0, 2, 3, 4, 5).reshape(b, s, kvh, g, hd)
+
+
+def windowed_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                       window: int, causal: bool = True,
+                       block: int = 512) -> jax.Array:
+    """Banded block-sparse attention (paper's banded case, §5.1).
+
+    Each query block attends to the ``window // block (+1)`` key blocks
+    inside the band — O(S * W) work/memory, sequence-length independent per
+    block.  q: (B, S, KV, G, hd); k, v: (B, S, KV, hd).
+    """
+    b, s, kvh, g, hd = q.shape
+    block = min(block, s)
+    assert s % block == 0 and window % block == 0
+    nb = s // block
+    wb = window // block                        # full blocks to the left
+    nwin = wb + 1 if causal else 2 * wb + 1
+    scale = 1.0 / (hd ** 0.5)
+
+    qs = q.reshape(b, nb, block, kvh, g, hd) * scale
+    ks = k.reshape(b, nb, block, kvh, hd)
+    vs = v.reshape(b, nb, block, kvh, hd)
+
+    # gather the window of key blocks for every query block
+    iq = jnp.arange(nb)[:, None]
+    off = jnp.arange(nwin)[None, :] - wb        # [-wb .. 0 (.. +wb)]
+    jk = iq + off                               # (nb, nwin)
+    valid_blk = (jk >= 0) & (jk < nb)
+    jk_c = jnp.clip(jk, 0, nb - 1)
+    k_win = ks[:, jk_c]                         # (B, nb, nwin, block, KV, hd)
+    v_win = vs[:, jk_c]
+
+    s_ij = jnp.einsum("bnqvgh,bnwkvh->bnvgqwk", qs, k_win,
+                      preferred_element_type=jnp.float32)
+    # element positions, broadcast to (nb, nwin, q, k)
+    qp = ((iq * block)[:, None] + jnp.arange(block)[None, :]) \
+        .reshape(nb, 1, block, 1)
+    kp = ((jk_c * block)[:, :, None] + jnp.arange(block)[None, None, :]) \
+        .reshape(nb, nwin, 1, block)
+    band = (qp - kp < window) & (kp - qp < window) & \
+        valid_blk.reshape(nb, nwin, 1, 1)
+    if causal:
+        band = band & (kp <= qp)
+    mask = band.transpose(0, 2, 1, 3)           # (nb, q, nwin, k)
+    s_ij = jnp.where(mask[None, :, None, None], s_ij, _NEG)
+    s_flat = s_ij.reshape(*s_ij.shape[:5], nwin * block)
+    p = jax.nn.softmax(s_flat, axis=-1).reshape(s_ij.shape)
+    out = jnp.einsum("bnvgqwk,bnwkvh->bnqvgh", p.astype(q.dtype), v_win)
+    return out.reshape(b, s, kvh, g, hd)
+
+
+def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                     pos: jax.Array, *, window: int = 0) -> jax.Array:
+    """One-token attention against a cache.
+
+    q: (B, 1, KV, G, hd); caches: (B, T, KV, hd); pos: () current length.
+    window > 0 restricts to the last ``window`` positions (SWA decode).
+    """
+    b, _, kvh, g, hd = q.shape
+    t = k_cache.shape[1]
+    scale = 1.0 / (hd ** 0.5)
+    s = jnp.einsum("bovgh,btvh->bvgt", q * scale, k_cache,
+                   preferred_element_type=jnp.float32)
+    idx = jnp.arange(t)
+    valid = idx[None, :] <= pos
+    if window:
+        valid = valid & (idx[None, :] > pos - window)
+    s = jnp.where(valid[:, None, None, :] if valid.ndim == 2
+                  else valid, s, _NEG)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bvgt,btvh->bvgh", p.astype(q.dtype), v_cache)
+    return out[:, None].transpose(0, 1, 2, 3, 4).reshape(b, 1, kvh, g, hd)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+def swiglu(x, w_gate, w_up, w_down):
+    h = jax.nn.silu(x @ w_gate) * (x @ w_up)
+    return h @ w_down
+
+
+def gelu_mlp(x, w1, w2):
+    return jax.nn.gelu(x @ w1) @ w2
+
+
+_MOE_RESHARD_AXIS = [None]
+
+
+def _moe_reshard_axis():
+    return _MOE_RESHARD_AXIS[0]
+
+
+def set_moe_reshard_axis(axis):
+    """Launcher hook: reshard MoE hidden activations onto ``axis`` before
+    the down-projection (requires an ambient mesh during tracing)."""
+    _MOE_RESHARD_AXIS[0] = axis
+
+
+# ---------------------------------------------------------------------------
+# Mixture of Experts — capacity-bounded gather-GEMM-scatter dispatch.
+# The same static-capacity pattern as core/bsmm.py: expert assignment is the
+# dynamic block occupancy; tokens are gathered per expert, multiplied as one
+# batched einsum over the stacked expert weights, and scattered back.
+# ---------------------------------------------------------------------------
+
+def moe_ffn_batched(x: jax.Array, router_w: jax.Array, w_gate: jax.Array,
+                    w_up: jax.Array, w_down: jax.Array, *, top_k: int,
+                    capacity_factor: float = 1.25
+                    ) -> tuple[jax.Array, jax.Array]:
+    """Per-batch-row dispatch: x (B, S, d) -> (B, S, d).
+
+    §Perf iteration (mixtral train_4k): dispatching over the GLOBAL token
+    set makes GSPMD reshuffle every token across the data axis (the
+    dispatch buffer inherits no batch sharding) — measured 88 s of
+    collectives per step.  vmapping the dispatch over the batch row keeps
+    every token inside its data shard; the only cross-device traffic left
+    is the expert weights' tensor-parallel reduction."""
+    out, aux = jax.vmap(
+        lambda row: moe_ffn(row, router_w, w_gate, w_up, w_down,
+                            top_k=top_k, capacity_factor=capacity_factor)
+    )(x)
+    return out, aux.mean()
+
+
+def moe_ffn(x: jax.Array, router_w: jax.Array, w_gate: jax.Array,
+            w_up: jax.Array, w_down: jax.Array, *, top_k: int,
+            capacity_factor: float = 1.25) -> tuple[jax.Array, jax.Array]:
+    """x: (T, d); router_w: (d, E); expert weights: (E, d, ff)/(E, ff, d).
+
+    Returns (out (T, d), aux_loss ()).  Tokens over capacity are dropped
+    (contribute zero) — the standard static-shape MoE contract.
+    """
+    t, d = x.shape
+    e = router_w.shape[1]
+    cap = int(capacity_factor * top_k * t / e) + 1
+    cap = ((cap + 15) // 16) * 16   # TP-shardable dispatch buffers
+
+    logits = (x.astype(jnp.float32) @ router_w.astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)                  # (T, E)
+    gate_vals, exp_idx = jax.lax.top_k(probs, top_k)         # (T, k)
+    gate_vals = gate_vals / (gate_vals.sum(-1, keepdims=True) + 1e-9)
+
+    # load-balancing auxiliary loss (Switch-style)
+    me = probs.mean(0)
+    ce = jnp.zeros((e,)).at[exp_idx.reshape(-1)].add(1.0) / (t * top_k)
+    aux = e * jnp.sum(me * ce)
+
+    # position of each (token, slot) within its expert, capacity-bounded
+    flat_e = exp_idx.reshape(-1)                             # (T*k,)
+    onehot = jax.nn.one_hot(flat_e, e, dtype=jnp.int32)      # (T*k, E)
+    pos_in_e = jnp.cumsum(onehot, axis=0) - 1                # running count
+    my_pos = jnp.take_along_axis(pos_in_e, flat_e[:, None], 1)[:, 0]
+    keep = my_pos < cap
+    dest = jnp.where(keep, flat_e * cap + my_pos, e * cap)   # park dropped
+
+    # dispatch: (E*cap+1, d) buffer
+    buf = jnp.zeros((e * cap + 1, d), x.dtype)
+    src = jnp.repeat(x, top_k, axis=0)
+    buf = buf.at[dest].add(src)
+    xe = buf[:e * cap].reshape(e, cap, d)
+
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", xe, w_gate)) * \
+        jnp.einsum("ecd,edf->ecf", xe, w_up)
+    # §Perf iteration (mixtral train_4k, #2): with ff tensor-parallel the
+    # down-projection emits (E, cap, d) PARTIAL sums whose all-reduce
+    # dominates the step (measured 88 s of collectives).  Resharding h from
+    # ff-sharded to cap-sharded first (one small all-to-all) makes the
+    # partials cap-sharded, shrinking the all-reduce by the TP degree.
+    if _moe_reshard_axis() is not None and cap % 16 == 0:
+        from jax.sharding import PartitionSpec as _P
+        h = jax.lax.with_sharding_constraint(
+            h, _P(None, _moe_reshard_axis(), None))
+    ye = jnp.einsum("ecf,efd->ecd", h, w_down)               # (E, cap, d)
+
+    # combine: gather back and weight by gate
+    flat_back = ye.reshape(e * cap, d)
+    flat_back = jnp.concatenate(
+        [flat_back, jnp.zeros((1, d), x.dtype)], axis=0)
+    y = flat_back[dest] * gate_vals.reshape(-1)[:, None].astype(x.dtype)
+    out = y.reshape(t, top_k, d).sum(axis=1)
+    return out, aux

@@ -1,0 +1,463 @@
+"""Unified LM covering all 10 assigned architectures.
+
+One parameter schema + three entry points:
+
+* ``forward``      — full-sequence logits (train / prefill);
+* ``loss_fn``      — causal (or frame-level) cross-entropy;
+* ``decode_step``  — one token with KV / SSM caches (serve path).
+
+Layers are stacked along a leading L axis and executed with ``lax.scan``
+(compact HLO — essential for the 512-device dry-run compile times) with
+``jax.checkpoint`` (remat) around each layer body for training memory.
+
+Families:
+  dense / audio / vlm : attention + (Swi)GLU blocks, uniform stack
+  moe                 : attention + MoE FFN (capacity-bounded dispatch)
+  ssm (mamba1)        : pure Mamba1 blocks, no attention anywhere
+  hybrid (mamba2)     : Mamba2 stack with ONE shared attention+MLP block
+                        applied every ``attn_every`` layers (zamba2-style;
+                        the shared block has a single parameter set)
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import layers as L
+from . import ssm
+from .config import ModelConfig
+
+Params = dict
+
+
+def _scan_layers(body, carry, xs, unroll: bool):
+    """lax.scan; fully unrolled in cfg.cost_mode so HLO cost analysis
+    counts every layer (XLA counts a while body once)."""
+    return jax.lax.scan(body, carry, xs, unroll=True if unroll else 1)
+
+
+# ---------------------------------------------------------------------------
+# Initialization
+# ---------------------------------------------------------------------------
+
+def _dense_init(key, shape, dtype, scale=None):
+    fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+    scale = scale if scale is not None else fan_in ** -0.5
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+def _attn_param_shapes(cfg: ModelConfig, lead: tuple) -> dict:
+    d, hd = cfg.d_model, cfg.hd
+    return {
+        "wq": lead + (d, cfg.n_heads * hd),
+        "wk": lead + (d, cfg.n_kv_heads * hd),
+        "wv": lead + (d, cfg.n_kv_heads * hd),
+        "wo": lead + (cfg.n_heads * hd, d),
+    }
+
+
+def _mlp_param_shapes(cfg: ModelConfig, lead: tuple) -> dict:
+    d, ff = cfg.d_model, cfg.d_ff
+    if cfg.mlp == "swiglu":
+        return {"w_gate": lead + (d, ff), "w_up": lead + (d, ff),
+                "w_down": lead + (ff, d)}
+    return {"w1": lead + (d, ff), "w2": lead + (ff, d)}
+
+
+def _mamba1_shapes(cfg: ModelConfig, lead: tuple) -> dict:
+    d, di, st, dr = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.dt_rank
+    return {
+        "in_proj": lead + (d, 2 * di),
+        "conv": lead + (di, cfg.d_conv),
+        "x_proj": lead + (di, dr + 2 * st),
+        "dt_proj": lead + (dr, di),
+        "dt_bias": lead + (di,),
+        "A_log": lead + (di, st),
+        "D": lead + (di,),
+        "out_proj": lead + (di, d),
+    }
+
+
+def _mamba2_shapes(cfg: ModelConfig, lead: tuple) -> dict:
+    d, di, st = cfg.d_model, cfg.d_inner, cfg.ssm_state
+    nh = cfg.n_ssm_heads
+    return {
+        "in_proj": lead + (d, 2 * di + 2 * st + nh),
+        "conv": lead + (di + 2 * st, cfg.d_conv),
+        "A_log": lead + (nh,),
+        "D": lead + (nh,),
+        "dt_bias": lead + (nh,),
+        "norm_scale": lead + (di,),
+        "out_proj": lead + (di, d),
+    }
+
+
+def param_shapes(cfg: ModelConfig) -> dict:
+    """Nested dict of parameter shapes (schema single source of truth)."""
+    d = cfg.d_model
+    Lc = cfg.n_layers
+    shapes: dict = {"embed": (cfg.vocab, d), "final_norm": (d,)}
+    if not cfg.tie_embeddings:
+        shapes["unembed"] = (cfg.vocab, d)
+    if cfg.frontend == "patches":
+        shapes["patch_proj"] = (d, d)
+
+    if cfg.family == "hybrid":
+        g = Lc // cfg.attn_every
+        lead = (g, cfg.attn_every)
+        shapes["layers"] = {**_mamba2_shapes(cfg, lead),
+                            "norm_mixer": lead + (d,)}
+        shapes["shared"] = {
+            **_attn_param_shapes(cfg, ()),
+            **_mlp_param_shapes(cfg, ()),
+            "norm_attn": (d,), "norm_mlp": (d,),
+        }
+        return shapes
+
+    lead = (Lc,)
+    if cfg.mixer == "mamba1":
+        shapes["layers"] = {**_mamba1_shapes(cfg, lead),
+                            "norm_mixer": lead + (d,)}
+        return shapes
+
+    layer: dict = {**_attn_param_shapes(cfg, lead),
+                   "norm_attn": lead + (d,), "norm_mlp": lead + (d,)}
+    if cfg.n_experts:
+        layer["router"] = lead + (d, cfg.n_experts)
+        layer["w_gate"] = lead + (cfg.n_experts, d, cfg.d_ff)
+        layer["w_up"] = lead + (cfg.n_experts, d, cfg.d_ff)
+        layer["w_down"] = lead + (cfg.n_experts, cfg.d_ff, d)
+    else:
+        layer.update(_mlp_param_shapes(cfg, lead))
+    shapes["layers"] = layer
+    return shapes
+
+
+def init_params(cfg: ModelConfig, key: jax.Array) -> Params:
+    shapes = param_shapes(cfg)
+    is_shape = lambda x: isinstance(x, tuple)  # noqa: E731
+    flat, treedef = jax.tree_util.tree_flatten_with_path(
+        shapes, is_leaf=is_shape)
+    keys = jax.random.split(key, len(flat))
+    out = []
+    for (path, shape), k in zip(flat, keys):
+        name = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
+        if "norm" in name or name == "D" or name == "A_log":
+            # A_log = 0 -> decay rate -1 (stable); norms start at identity
+            out.append(jnp.zeros(shape, jnp.float32))
+        elif name == "dt_bias":
+            out.append(jnp.full(shape, -2.0, jnp.float32))
+        else:
+            out.append(_dense_init(k, shape, cfg.jdtype))
+    return jax.tree_util.tree_unflatten(
+        jax.tree_util.tree_structure(shapes, is_leaf=is_shape), out)
+
+
+def abstract_params(cfg: ModelConfig) -> Params:
+    """ShapeDtypeStruct tree, no allocation (dry-run contract)."""
+    return jax.eval_shape(lambda: init_params(cfg, jax.random.PRNGKey(0)))
+
+
+# ---------------------------------------------------------------------------
+# Blocks
+# ---------------------------------------------------------------------------
+
+def _attention(cfg: ModelConfig, p: dict, x: jax.Array,
+               positions: jax.Array) -> jax.Array:
+    b, s, d = x.shape
+    kv, hd = cfg.n_kv_heads, cfg.hd
+    g = cfg.n_heads // kv
+    q = (x @ p["wq"]).reshape(b, s, kv, g, hd)
+    k = (x @ p["wk"]).reshape(b, s, kv, hd)
+    v = (x @ p["wv"]).reshape(b, s, kv, hd)
+    q = L.apply_rope(q.reshape(b, s, kv * g, hd), positions,
+                     cfg.rope_theta).reshape(b, s, kv, g, hd)
+    k = L.apply_rope(k, positions, cfg.rope_theta)
+    if cfg.swa_window and cfg.swa_window < s:
+        # §Perf iteration (danube train_4k): block=1024 halves the gathered
+        # K/V window copies (nwin 9 -> 5) at ~equal score bytes
+        out = L.windowed_attention(q, k, v, window=cfg.swa_window,
+                                   causal=cfg.causal,
+                                   block=min(1024, s, cfg.swa_window))
+    else:
+        # cost mode uses larger chunks: identical flop totals, far fewer
+        # unrolled scan steps (compile-time bound for 32k sequences)
+        qc = min(4096 if cfg.cost_mode else 512, s)
+        kc = min(8192 if cfg.cost_mode else 1024, s)
+        out = L.chunked_attention(q, k, v, causal=cfg.causal,
+                                  q_chunk=qc, kv_chunk=kc,
+                                  unroll=cfg.cost_mode)
+    return out.reshape(b, s, kv * g * hd) @ p["wo"]
+
+
+def _mlp(cfg: ModelConfig, p: dict, x: jax.Array) -> jax.Array:
+    if cfg.mlp == "swiglu":
+        return L.swiglu(x, p["w_gate"], p["w_up"], p["w_down"])
+    return L.gelu_mlp(x, p["w1"], p["w2"])
+
+
+def _attn_block(cfg: ModelConfig, p: dict, x: jax.Array,
+                positions: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Pre-norm attention + FFN/MoE block. Returns (x, aux_loss)."""
+    h = L.apply_norm(cfg.norm, x, p.get("norm_attn"))
+    x = x + _attention(cfg, p, h, positions)
+    h = L.apply_norm(cfg.norm, x, p.get("norm_mlp"))
+    aux = jnp.zeros((), jnp.float32)
+    if cfg.n_experts:
+        y, aux = L.moe_ffn_batched(h, p["router"], p["w_gate"],
+                                   p["w_up"], p["w_down"],
+                                   top_k=cfg.top_k,
+                                   capacity_factor=cfg.moe_capacity_factor)
+        x = x + y
+    else:
+        x = x + _mlp(cfg, p, h)
+    return x, aux
+
+
+# ---------------------------------------------------------------------------
+# Forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+def _embed_inputs(cfg: ModelConfig, params: Params, batch: dict
+                  ) -> tuple[jax.Array, jax.Array]:
+    """Returns (x (B,S,d), positions (B,S))."""
+    if cfg.frontend == "frames":
+        x = batch["frames"].astype(cfg.jdtype)
+    elif cfg.frontend == "patches":
+        tok = params["embed"][batch["tokens"]]
+        pat = batch["patches"].astype(cfg.jdtype) @ params["patch_proj"]
+        x = jnp.concatenate([pat, tok], axis=1)
+    else:
+        x = params["embed"][batch["tokens"]]
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    return x.astype(cfg.jdtype), positions
+
+
+def forward(cfg: ModelConfig, params: Params, batch: dict,
+            remat: bool = True) -> tuple[jax.Array, jax.Array]:
+    """Full-sequence logits. Returns (logits (B,S,V), aux_loss)."""
+    x, positions = _embed_inputs(cfg, params, batch)
+
+    # cost mode: fewer, larger chunks bound the unrolled-compile size;
+    # mixer recurrence flops are elementwise (<5% of layer flops), so the
+    # intra-chunk O(C) growth distorts totals negligibly
+    ssm_chunk = 1024 if cfg.cost_mode else 256
+    if cfg.family == "hybrid":
+        x, aux = _hybrid_stack(cfg, params, x, positions, remat)
+    elif cfg.mixer == "mamba1":
+        def body(x, lp):
+            h = L.apply_norm(cfg.norm, x, lp.get("norm_mixer"))
+            y = ssm.mamba1_forward(lp, h, state=cfg.ssm_state,
+                                   chunk=ssm_chunk, unroll=cfg.cost_mode)
+            return x + y, jnp.zeros((), jnp.float32)
+        if remat:
+            body = jax.checkpoint(body)
+        x, auxs = _scan_layers(body, x, params["layers"], cfg.cost_mode)
+        aux = auxs.sum()
+    else:
+        def body(x, lp):
+            x, aux = _attn_block(cfg, lp, x, positions)
+            return x, aux
+        if remat:
+            body = jax.checkpoint(body)
+        x, auxs = _scan_layers(body, x, params["layers"], cfg.cost_mode)
+        aux = auxs.sum()
+
+    x = L.apply_norm(cfg.norm, x, params.get("final_norm"))
+    unembed = params.get("unembed", params["embed"])
+    logits = x @ unembed.T.astype(x.dtype)
+    return logits, aux
+
+
+def _hybrid_stack(cfg: ModelConfig, params: Params, x: jax.Array,
+                  positions: jax.Array, remat: bool
+                  ) -> tuple[jax.Array, jax.Array]:
+    shared = params["shared"]
+
+    ssm_chunk = 512 if cfg.cost_mode else 128
+
+    def group(x, gp):
+        def mamba_body(x, lp):
+            h = L.apply_norm(cfg.norm, x, lp.get("norm_mixer"))
+            y = ssm.mamba2_forward(lp, h, state=cfg.ssm_state,
+                                   head_dim=cfg.ssm_head_dim,
+                                   chunk=ssm_chunk, unroll=cfg.cost_mode)
+            return x + y, None
+        if remat:
+            mamba_body = jax.checkpoint(mamba_body)
+        x, _ = _scan_layers(mamba_body, x, gp, cfg.cost_mode)
+        # shared attention + MLP block (single parameter set, reused)
+        h = L.apply_norm(cfg.norm, x, shared.get("norm_attn"))
+        x = x + _attention(cfg, shared, h, positions)
+        h = L.apply_norm(cfg.norm, x, shared.get("norm_mlp"))
+        x = x + _mlp(cfg, shared, h)
+        return x, jnp.zeros((), jnp.float32)
+
+    if remat:
+        group = jax.checkpoint(group)
+    x, auxs = _scan_layers(group, x, params["layers"], cfg.cost_mode)
+    return x, auxs.sum()
+
+
+def loss_fn(cfg: ModelConfig, params: Params, batch: dict,
+            remat: bool = True) -> tuple[jax.Array, dict]:
+    logits, aux = forward(cfg, params, batch, remat=remat)
+    targets = batch["targets"]
+    if cfg.frontend == "patches":
+        logits = logits[:, cfg.n_patches:]        # loss on text positions
+    logits = logits.astype(jnp.float32)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    loss = nll.mean() + 0.01 * aux
+    return loss, {"nll": nll.mean(), "aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# Decode (serve path)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class CacheSpec:
+    """Shapes of the decode cache for one config."""
+    cfg: ModelConfig
+    batch: int
+    max_len: int
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               abstract: bool = False) -> dict:
+    """KV cache for attention layers and/or SSM state for mamba layers."""
+    def mk(shape, dtype):
+        if abstract:
+            return jax.ShapeDtypeStruct(shape, dtype)
+        return jnp.zeros(shape, dtype)
+
+    Lc, d, hd, kv = cfg.n_layers, cfg.d_model, cfg.hd, cfg.n_kv_heads
+    cache: dict = {}
+    if cfg.family == "hybrid":
+        g = Lc // cfg.attn_every
+        cache["k"] = mk((g, batch, max_len, kv, hd), cfg.jdtype)
+        cache["v"] = mk((g, batch, max_len, kv, hd), cfg.jdtype)
+        cache["conv"] = mk((g, cfg.attn_every, batch, cfg.d_conv - 1,
+                            cfg.d_inner + 2 * cfg.ssm_state), cfg.jdtype)
+        cache["ssm"] = mk((g, cfg.attn_every, batch, cfg.n_ssm_heads,
+                           cfg.ssm_head_dim, cfg.ssm_state), jnp.float32)
+    elif cfg.mixer == "mamba1":
+        cache["conv"] = mk((Lc, batch, cfg.d_conv - 1, cfg.d_inner),
+                           cfg.jdtype)
+        cache["ssm"] = mk((Lc, batch, cfg.d_inner, cfg.ssm_state),
+                          jnp.float32)
+    else:
+        # SWA archs only ever attend to the last ``window`` positions, so
+        # the cache can be a ring buffer of that length (big win for
+        # long_500k).  Full-attention archs need the whole sequence.
+        cache["k"] = mk((Lc, batch, max_len, kv, hd), cfg.jdtype)
+        cache["v"] = mk((Lc, batch, max_len, kv, hd), cfg.jdtype)
+    return cache
+
+
+def _decode_attention_layer(cfg: ModelConfig, p: dict, x: jax.Array,
+                            k_cache, v_cache, pos):
+    """x: (B, 1, d); caches (B, T, KV, hd). Returns (y, k_cache, v_cache)."""
+    b, _, d = x.shape
+    kv, hd = cfg.n_kv_heads, cfg.hd
+    g = cfg.n_heads // kv
+    q = (x @ p["wq"]).reshape(b, 1, kv, g, hd)
+    k = (x @ p["wk"]).reshape(b, 1, kv, hd)
+    v = (x @ p["wv"]).reshape(b, 1, kv, hd)
+    posb = jnp.full((b, 1), pos)
+    q = L.apply_rope(q.reshape(b, 1, kv * g, hd), posb,
+                     cfg.rope_theta).reshape(b, 1, kv, g, hd)
+    k = L.apply_rope(k, posb, cfg.rope_theta)
+    k_cache = jax.lax.dynamic_update_slice(
+        k_cache, k.astype(k_cache.dtype), (0, pos, 0, 0))
+    v_cache = jax.lax.dynamic_update_slice(
+        v_cache, v.astype(v_cache.dtype), (0, pos, 0, 0))
+    out = L.decode_attention(q, k_cache, v_cache, pos,
+                             window=cfg.swa_window)
+    y = out.reshape(b, 1, kv * g * hd) @ p["wo"]
+    return y, k_cache, v_cache
+
+
+def decode_step(cfg: ModelConfig, params: Params, token: jax.Array,
+                cache: dict, pos: jax.Array) -> tuple[jax.Array, dict]:
+    """One decode step.  token: (B,) int32; pos: () int32 current length.
+
+    Returns (logits (B, V), new cache).
+    """
+    x = params["embed"][token][:, None, :].astype(cfg.jdtype)  # (B,1,d)
+    b = x.shape[0]
+
+    if cfg.family == "hybrid":
+        def group(x, slices):
+            gp, k_c, v_c, conv_c, ssm_c = slices
+
+            def mamba_body(x, lp_state):
+                lp, conv1, ssm1 = lp_state
+                h = L.apply_norm(cfg.norm, x[:, 0], lp.get("norm_mixer"))
+                y, new_state = ssm.mamba2_step(
+                    lp, h, ssm.Mamba2State(conv1, ssm1),
+                    state=cfg.ssm_state, head_dim=cfg.ssm_head_dim)
+                return x + y[:, None], (new_state.conv, new_state.ssm)
+
+            x, new_states = _scan_layers(mamba_body, x,
+                                         (gp, conv_c, ssm_c),
+                                         cfg.cost_mode)
+            shared = params["shared"]
+            h = L.apply_norm(cfg.norm, x, shared.get("norm_attn"))
+            y, k_c, v_c = _decode_attention_layer(cfg, shared, h, k_c,
+                                                  v_c, pos)
+            x = x + y
+            h = L.apply_norm(cfg.norm, x, shared.get("norm_mlp"))
+            x = x + _mlp(cfg, shared, h)
+            return x, (k_c, v_c, new_states[0], new_states[1])
+
+        x, (ks, vs, convs, ssms) = _scan_layers(
+            group, x, (params["layers"], cache["k"], cache["v"],
+                       cache["conv"], cache["ssm"]), cfg.cost_mode)
+        cache = {"k": ks, "v": vs, "conv": convs, "ssm": ssms}
+    elif cfg.mixer == "mamba1":
+        def body(x, lp_state):
+            lp, conv1, ssm1 = lp_state
+            h = L.apply_norm(cfg.norm, x[:, 0], lp.get("norm_mixer"))
+            y, new_state = ssm.mamba1_step(lp, h,
+                                           ssm.MambaState(conv1, ssm1),
+                                           state=cfg.ssm_state)
+            return x + y[:, None], (new_state.conv, new_state.ssm)
+
+        x, (convs, ssms) = _scan_layers(
+            body, x, (params["layers"], cache["conv"], cache["ssm"]),
+            cfg.cost_mode)
+        cache = {"conv": convs, "ssm": ssms}
+    else:
+        def body(x, lp_kv):
+            lp, k_c, v_c = lp_kv
+            h = L.apply_norm(cfg.norm, x, lp.get("norm_attn"))
+            y, k_c, v_c = _decode_attention_layer(cfg, lp, h, k_c, v_c,
+                                                  pos)
+            x = x + y
+            h = L.apply_norm(cfg.norm, x, lp.get("norm_mlp"))
+            if cfg.n_experts:
+                yff, _ = L.moe_ffn(h[:, 0], lp["router"], lp["w_gate"],
+                                   lp["w_up"], lp["w_down"],
+                                   top_k=cfg.top_k,
+                                   capacity_factor=cfg.moe_capacity_factor)
+                x = x + yff[:, None]
+            else:
+                x = x + _mlp(cfg, lp, h)
+            return x, (k_c, v_c)
+
+        x, (ks, vs) = _scan_layers(
+            body, x, (params["layers"], cache["k"], cache["v"]),
+            cfg.cost_mode)
+        cache = {"k": ks, "v": vs}
+
+    x = L.apply_norm(cfg.norm, x, params.get("final_norm"))
+    unembed = params.get("unembed", params["embed"])
+    logits = (x[:, 0] @ unembed.T.astype(x.dtype)).astype(jnp.float32)
+    return logits, cache

@@ -1,0 +1,237 @@
+"""State-space mixers: Mamba1 (falcon-mamba) and Mamba2/SSD (zamba2).
+
+Hardware adaptation (DESIGN.md §3): the CUDA selective-scan kernel becomes a
+**chunked scan** — an outer ``lax.scan`` over sequence chunks carrying the
+SSM state, with a parallel associative combine *inside* each chunk.  The
+per-timestep state tensor (B, d_inner, N) is materialized only within one
+chunk (decay/drive are built inside the chunk body from the small per-token
+projections), so activation memory is O(chunk * d_inner * N) rather than
+O(S * d_inner * N); states are checkpointed at chunk boundaries for the
+backward pass.  This is the TPU-idiomatic equivalent of the recurrence.
+
+Both mixers expose:
+  * ``*_forward``  — full-sequence training/prefill path;
+  * ``*_step``     — single-token decode with explicit carried state
+    (O(1) per token; this is why long_500k decode runs for SSM archs).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+def causal_conv1d(x: jax.Array, w: jax.Array) -> jax.Array:
+    """Depthwise causal conv. x: (B, S, C), w: (C, K) -> (B, S, C)."""
+    k = w.shape[-1]
+    pad = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = jnp.zeros(x.shape, jnp.float32)
+    for j in range(k):
+        out = out + pad[:, j:j + x.shape[1], :].astype(jnp.float32) * \
+            w[:, j].astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def conv_step(x_new: jax.Array, conv_state: jax.Array, w: jax.Array
+              ) -> tuple[jax.Array, jax.Array]:
+    """Decode-time depthwise conv: x_new (B, C), conv_state (B, K-1, C)."""
+    k = w.shape[-1]
+    window = jnp.concatenate([conv_state, x_new[:, None, :]], axis=1)
+    out = jnp.einsum("bkc,ck->bc", window.astype(jnp.float32),
+                     w.astype(jnp.float32)).astype(x_new.dtype)
+    return out, window[:, 1:k, :]
+
+
+def _assoc_combine(x, y):
+    ax, bx = x
+    ay, by = y
+    return ax * ay, bx * ay + by
+
+
+# ---------------------------------------------------------------------------
+# Mamba1 (selective SSM) — falcon-mamba-7b
+# params (per layer): in_proj (d, 2*di), conv (di, K), x_proj
+# (di, dt_rank + 2*state), dt_proj (dt_rank, di) + dt_bias (di,),
+# A_log (di, state), D (di,), out_proj (di, d)
+# ---------------------------------------------------------------------------
+
+class MambaState(NamedTuple):
+    conv: jax.Array      # (B, K-1, di)
+    ssm: jax.Array       # (B, di, state)
+
+
+def mamba1_forward(p: dict, u: jax.Array, *, state: int,
+                   chunk: int = 256, unroll: bool = False) -> jax.Array:
+    """u: (B, S, d) -> (B, S, d)."""
+    bsz, s, _ = u.shape
+    xz = u @ p["in_proj"]
+    x, z = jnp.split(xz, 2, axis=-1)                     # (B, S, di)
+    x = causal_conv1d(x, p["conv"])
+    x = jax.nn.silu(x)
+    proj = x @ p["x_proj"]                               # (B,S,dtr+2N)
+    dt_rank = p["dt_proj"].shape[0]
+    dt, bmat, cmat = jnp.split(proj, [dt_rank, dt_rank + state], axis=-1)
+    dt = jax.nn.softplus(dt @ p["dt_proj"] + p["dt_bias"])  # (B,S,di)
+    a = -jnp.exp(p["A_log"].astype(jnp.float32))         # (di, N)
+    di = x.shape[-1]
+
+    chunk = min(chunk, s)
+    assert s % chunk == 0
+    nc = s // chunk
+
+    def to_chunks(t):   # (B, S, ...) -> (nc, B, chunk, ...)
+        return t.reshape(bsz, nc, chunk, *t.shape[2:]).swapaxes(0, 1)
+
+    xs = (to_chunks(dt), to_chunks(bmat), to_chunks(cmat), to_chunks(x))
+
+    def outer(h, inp):
+        dt_i, b_i, c_i, x_i = inp               # (B, chunk, ...)
+        decay = jnp.exp(dt_i[..., None].astype(jnp.float32) * a)
+        drive = (dt_i[..., None] * b_i[:, :, None, :] *
+                 x_i[..., None]).astype(jnp.float32)     # (B,C,di,N)
+        aa, bb = jax.lax.associative_scan(_assoc_combine, (decay, drive),
+                                          axis=1)
+        h_all = aa * h[:, None] + bb
+        y_i = jnp.einsum("bsdn,bsn->bsd", h_all,
+                         c_i.astype(jnp.float32))
+        return h_all[:, -1], y_i
+
+    h0 = jnp.zeros((bsz, di, state), jnp.float32)
+    _, y_chunks = jax.lax.scan(outer, h0, xs, unroll=True if unroll else 1)
+    y = y_chunks.swapaxes(0, 1).reshape(bsz, s, di).astype(u.dtype)
+    y = y + x * p["D"].astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    return y @ p["out_proj"]
+
+
+def mamba1_step(p: dict, u_t: jax.Array, st: MambaState, *, state: int
+                ) -> tuple[jax.Array, MambaState]:
+    """u_t: (B, d) one token -> (y_t, new state). O(1) in sequence length."""
+    xz = u_t @ p["in_proj"]
+    x, z = jnp.split(xz, 2, axis=-1)                     # (B, di)
+    x, conv_new = conv_step(x, st.conv, p["conv"])
+    x = jax.nn.silu(x)
+    proj = x @ p["x_proj"]
+    dt_rank = p["dt_proj"].shape[0]
+    dt, bmat, cmat = jnp.split(proj, [dt_rank, dt_rank + state], axis=-1)
+    dt = jax.nn.softplus(dt @ p["dt_proj"] + p["dt_bias"])
+    a = -jnp.exp(p["A_log"].astype(jnp.float32))
+    decay = jnp.exp(dt[..., None].astype(jnp.float32) * a)   # (B,di,N)
+    drive = (dt[..., None] * bmat[:, None, :] * x[..., None]).astype(
+        jnp.float32)
+    h = decay * st.ssm + drive
+    y = jnp.einsum("bdn,bn->bd", h, cmat.astype(jnp.float32)).astype(
+        u_t.dtype)
+    y = y + x * p["D"].astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    return y @ p["out_proj"], MambaState(conv_new, h)
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 (SSD, scalar decay per head) — zamba2
+# params: in_proj (d, 2*di + 2*state + nh), conv ((di + 2*state), K),
+# A_log (nh,), D (nh,), dt_bias (nh,), norm_scale (di,), out_proj (di, d)
+# ---------------------------------------------------------------------------
+
+class Mamba2State(NamedTuple):
+    conv: jax.Array      # (B, K-1, di + 2N)
+    ssm: jax.Array       # (B, nh, hd, N)
+
+
+def mamba2_forward(p: dict, u: jax.Array, *, state: int, head_dim: int,
+                   chunk: int = 128, unroll: bool = False) -> jax.Array:
+    bsz, s, _ = u.shape
+    di = p["out_proj"].shape[0]
+    nh = di // head_dim
+    zxbcdt = u @ p["in_proj"]
+    z, xbc, dt = jnp.split(zxbcdt, [di, 2 * di + 2 * state], axis=-1)
+    xbc = jax.nn.silu(causal_conv1d(xbc, p["conv"]))
+    x, bmat, cmat = jnp.split(xbc, [di, di + state], axis=-1)
+    dt = jax.nn.softplus(dt + p["dt_bias"])              # (B, S, nh)
+    a = -jnp.exp(p["A_log"].astype(jnp.float32))         # (nh,)
+    xh = x.reshape(bsz, s, nh, head_dim)
+
+    chunk = min(chunk, s)
+    assert s % chunk == 0
+    nc = s // chunk
+
+    def to_chunks(t):
+        return t.reshape(bsz, nc, chunk, *t.shape[2:]).swapaxes(0, 1)
+
+    xs = (to_chunks(dt), to_chunks(bmat), to_chunks(cmat), to_chunks(xh))
+
+    def outer(h, inp):
+        dt_i, b_i, c_i, x_i = inp
+        cdt = x_i.dtype
+        # SSD intra-chunk attention form: scalar decay per head.
+        # §Perf iteration (zamba2 train_4k): the (B, C, C, nh) decay matrix
+        # and its einsums ran in f32 (~19 s memory term); exp(gap) is in
+        # (0, 1] and C.B products are O(1), so bf16 carries them safely —
+        # accumulation stays f32 via preferred_element_type.
+        logdec = dt_i.astype(jnp.float32) * a            # (B,C,nh) (<0)
+        ell = jnp.cumsum(logdec, axis=1)                 # (B,C,nh)
+        # M[t,tau] = exp(ell_t - ell_tau) * (C_t . B_tau), tau <= t
+        cb = jnp.einsum("btn,bsn->bts", c_i, b_i,
+                        preferred_element_type=jnp.float32)  # (B,C,C)
+        # iteration 2: build the (B,t,s,nh) tensors in bf16 END-TO-END —
+        # casting after a f32 exp still materializes the f32 intermediate
+        # (measured: no change in bytes accessed); exp in bf16 with the
+        # f32 cumsum ell keeps relative error ~1e-2 on (0,1] decays
+        ell_c = ell.astype(cdt)
+        gap = ell_c[:, :, None, :] - ell_c[:, None, :, :]  # (B,t,s,nh) bf16
+        tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+        m = (jnp.where(tri[None, :, :, None], jnp.exp(gap),
+                       jnp.zeros((), cdt))
+             * cb[..., None].astype(cdt))               # (B,t,s,nh)
+        dx = (dt_i[..., None] * x_i.astype(jnp.float32)).astype(cdt)
+        y_intra = jnp.einsum("btsh,bshp->bthp", m, dx,
+                             preferred_element_type=jnp.float32)
+        # inter-chunk: contribution of carried state
+        y_inter = jnp.einsum("bhpn,btn,bth->bthp", h,
+                             c_i.astype(jnp.float32), jnp.exp(ell))
+        # new carried state
+        w = jnp.exp(ell[:, -1:, :] - ell).astype(cdt)    # decay to chunk end
+        h_new = h * jnp.exp(ell[:, -1])[:, :, None, None] + jnp.einsum(
+            "bth,bthp,btn->bhpn", w, dx, b_i.astype(cdt),
+            preferred_element_type=jnp.float32)
+        return h_new, y_intra + y_inter
+
+    h0 = jnp.zeros((bsz, nh, head_dim, state), jnp.float32)
+    _, y_chunks = jax.lax.scan(outer, h0, xs, unroll=True if unroll else 1)
+    y = y_chunks.swapaxes(0, 1).reshape(bsz, s, nh, head_dim)
+    y = y + xh.astype(jnp.float32) * p["D"][:, None]
+    y = y.reshape(bsz, s, di).astype(u.dtype)
+    y = y * jax.nn.silu(z)
+    # grouped RMSNorm before out-projection (mamba2 uses it)
+    var = jnp.mean(jnp.square(y.astype(jnp.float32)), -1, keepdims=True)
+    y = (y.astype(jnp.float32) * jax.lax.rsqrt(var + 1e-5) *
+         (1.0 + p["norm_scale"])).astype(u.dtype)
+    return y @ p["out_proj"]
+
+
+def mamba2_step(p: dict, u_t: jax.Array, st: Mamba2State, *, state: int,
+                head_dim: int) -> tuple[jax.Array, Mamba2State]:
+    bsz = u_t.shape[0]
+    di = p["out_proj"].shape[0]
+    nh = di // head_dim
+    zxbcdt = u_t @ p["in_proj"]
+    z, xbc, dt = jnp.split(zxbcdt, [di, 2 * di + 2 * state], axis=-1)
+    xbc, conv_new = conv_step(xbc, st.conv, p["conv"])
+    xbc = jax.nn.silu(xbc)
+    x, bmat, cmat = jnp.split(xbc, [di, di + state], axis=-1)
+    dt = jax.nn.softplus(dt + p["dt_bias"])              # (B, nh)
+    a = -jnp.exp(p["A_log"].astype(jnp.float32))
+    xh = x.reshape(bsz, nh, head_dim)
+    decay = jnp.exp(dt.astype(jnp.float32) * a)          # (B, nh)
+    drive = (dt[..., None, None] * xh[..., None] *
+             bmat[:, None, None, :]).astype(jnp.float32)
+    h = decay[..., None, None] * st.ssm + drive
+    y = jnp.einsum("bhpn,bn->bhp", h, cmat.astype(jnp.float32))
+    y = y + xh.astype(jnp.float32) * p["D"][:, None]
+    y = y.reshape(bsz, di).astype(u_t.dtype)
+    y = y * jax.nn.silu(z)
+    var = jnp.mean(jnp.square(y.astype(jnp.float32)), -1, keepdims=True)
+    y = (y.astype(jnp.float32) * jax.lax.rsqrt(var + 1e-5) *
+         (1.0 + p["norm_scale"])).astype(u_t.dtype)
+    return y @ p["out_proj"], Mamba2State(conv_new, h)

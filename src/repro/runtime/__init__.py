@@ -1,0 +1,4 @@
+from .compression import (compressed_grad_tree, dequantize_int8,  # noqa
+                           quantize_int8)
+from .fault import FaultInjector, HeartbeatMonitor, TrainingRunner  # noqa
+from .elastic import elastic_remesh_plan, reshard_tree  # noqa: F401

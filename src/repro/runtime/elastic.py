@@ -1,0 +1,70 @@
+"""Elastic re-scaling: re-plan the mesh after losing nodes and reshard.
+
+Policy for the production 16x16 pod (DESIGN.md):
+
+* the model axis must keep its size (tensor-parallel degree is baked into
+  the layer math), so capacity changes come out of the **data axis**;
+* losing up to d-1 data rows degrades data parallelism 16 -> 16-k and the
+  global batch either shrinks proportionally or is preserved via more
+  gradient-accumulation microbatches (the launcher picks);
+* params/opt-state move to the new mesh by ``jax.device_put`` with the
+  re-derived shardings (checkpoint/store.py restore path does the same
+  thing across restarts — same code path, exercised in tests).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh
+
+from repro.launch.sharding import param_shardings
+
+
+@dataclasses.dataclass(frozen=True)
+class RemeshPlan:
+    old_shape: tuple
+    new_shape: tuple
+    axis_names: tuple
+    lost_devices: int
+    microbatch_scale: int     # extra grad-accumulation to keep global batch
+
+    @property
+    def new_device_count(self) -> int:
+        n = 1
+        for s in self.new_shape:
+            n *= s
+        return n
+
+
+def elastic_remesh_plan(mesh_shape: tuple, axis_names: tuple,
+                        n_failed: int, *, data_axis: str = "data",
+                        keep_global_batch: bool = True) -> RemeshPlan:
+    """Shrink the data axis by enough rows to cover ``n_failed`` chips."""
+    shape = dict(zip(axis_names, mesh_shape))
+    row = 1
+    for a, s in shape.items():
+        if a != data_axis:
+            row *= s
+    rows_lost = -(-n_failed // row)              # ceil
+    if rows_lost >= shape[data_axis]:
+        raise RuntimeError("not enough healthy rows to rebuild the mesh")
+    new_shape = dict(shape)
+    new_shape[data_axis] = shape[data_axis] - rows_lost
+    scale = 1
+    if keep_global_batch:
+        # keep global batch by extra accumulation (rounded up)
+        scale = -(-shape[data_axis] // new_shape[data_axis])
+    return RemeshPlan(
+        old_shape=tuple(shape[a] for a in axis_names),
+        new_shape=tuple(new_shape[a] for a in axis_names),
+        axis_names=axis_names,
+        lost_devices=n_failed,
+        microbatch_scale=scale)
+
+
+def reshard_tree(tree, cfg, new_mesh: Mesh):
+    """Move params (or any tree with param-rule shardings) onto new_mesh."""
+    sh = param_shardings(cfg, new_mesh)
+    return jax.tree.map(lambda x, s: jax.device_put(x, s), tree, sh)

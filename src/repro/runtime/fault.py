@@ -1,0 +1,131 @@
+"""Fault tolerance: heartbeats, failure detection, checkpoint/restart,
+straggler mitigation.
+
+On a real 1000+-node deployment the SPMD job cannot absorb a node loss in
+place: the runtime's job is (a) to *detect* failures/stragglers fast, (b)
+to bound lost work via frequent async checkpoints, and (c) to restart —
+possibly on fewer nodes (elastic re-shard, runtime/elastic.py).  This
+module implements that control loop in a hardware-independent way:
+
+* ``HeartbeatMonitor`` — per-worker last-seen timestamps; a worker silent
+  for ``timeout`` is declared failed; a worker whose step time exceeds
+  ``straggler_factor`` x the fleet median is flagged a straggler (the
+  launcher's response: exclude-and-rescale or swap-in a hot spare);
+* ``FaultInjector`` — deterministic failure schedule for tests/drills
+  (fail worker w at step s);
+* ``TrainingRunner`` — the restartable training loop: checkpoint every
+  ``ckpt_every``, on failure restore the latest committed checkpoint and
+  continue (on a re-planned mesh if the world shrank).  Exercised in
+  tests/test_runtime.py with real (small) models and real failures.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Optional
+
+import numpy as np
+
+from repro.checkpoint import CheckpointManager
+
+
+class WorkerFailure(RuntimeError):
+    def __init__(self, worker: int, step: int):
+        super().__init__(f"worker {worker} failed at step {step}")
+        self.worker = worker
+        self.step = step
+
+
+@dataclasses.dataclass
+class HeartbeatMonitor:
+    n_workers: int
+    timeout: float = 30.0
+    straggler_factor: float = 2.0
+
+    def __post_init__(self):
+        now = time.monotonic()
+        self.last_seen = np.full(self.n_workers, now)
+        self.step_times: list[list[float]] = [[] for _ in
+                                              range(self.n_workers)]
+
+    def beat(self, worker: int, step_time: Optional[float] = None):
+        self.last_seen[worker] = time.monotonic()
+        if step_time is not None:
+            self.step_times[worker].append(step_time)
+
+    def failed_workers(self) -> list[int]:
+        now = time.monotonic()
+        return [w for w in range(self.n_workers)
+                if now - self.last_seen[w] > self.timeout]
+
+    def stragglers(self) -> list[int]:
+        recent = [np.mean(t[-5:]) if t else np.nan
+                  for t in self.step_times]
+        med = np.nanmedian(recent)
+        if not np.isfinite(med):
+            return []
+        return [w for w, t in enumerate(recent)
+                if np.isfinite(t) and t > self.straggler_factor * med]
+
+
+@dataclasses.dataclass
+class FaultInjector:
+    """fail_at: {step: worker}; raises WorkerFailure when reached."""
+    fail_at: dict
+
+    def check(self, step: int):
+        if step in self.fail_at:
+            w = self.fail_at.pop(step)
+            raise WorkerFailure(w, step)
+
+
+@dataclasses.dataclass
+class TrainingRunner:
+    """Restartable loop: step_fn is pure (state, batch) -> (state, metrics).
+
+    ``state`` is any pytree (params+opt).  ``batch_fn(step)`` supplies the
+    batch — stateless access lets a restart resume mid-stream exactly
+    (data/pipeline.py contract).
+    """
+    step_fn: Callable
+    batch_fn: Callable
+    ckpt: CheckpointManager
+    ckpt_every: int = 25
+    max_restarts: int = 3
+    injector: Optional[FaultInjector] = None
+    on_restart: Optional[Callable] = None   # state <- on_restart(state)
+
+    def run(self, state, n_steps: int) -> tuple:
+        """Returns (state, history dict)."""
+        history = {"loss": [], "restarts": 0, "restored_from": []}
+        step = 0
+        restarts = 0
+        # always have a restore point (a failure before the first periodic
+        # checkpoint must not resume with partially-advanced state)
+        self.ckpt.save(0, (0, state), blocking=True)
+        while step < n_steps:
+            try:
+                while step < n_steps:
+                    if self.injector is not None:
+                        self.injector.check(step)
+                    state, metrics = self.step_fn(state,
+                                                  self.batch_fn(step))
+                    loss = metrics.get("loss")
+                    if loss is not None:
+                        history["loss"].append(float(loss))
+                    step += 1
+                    if step % self.ckpt_every == 0:
+                        self.ckpt.save(step, (step, state))
+            except WorkerFailure:
+                restarts += 1
+                history["restarts"] = restarts
+                if restarts > self.max_restarts:
+                    raise
+                restored, _ = self.ckpt.restore_latest((step, state))
+                step, state = restored
+                step = int(np.asarray(step))
+                history["restored_from"].append(step)
+                if self.on_restart is not None:
+                    state = self.on_restart(state)
+        self.ckpt.wait()
+        return state, history

@@ -1,0 +1,212 @@
+"""TPU block-sparse engine: packing, mask pyramid, pair enumeration, bsmm."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import blocksparse as bsp
+from repro.core.bsmm import (bsmm, bsmm_from_dense, compute_c_structure,
+                             pair_counts_per_level, useful_flops)
+from repro.core.patterns import (banded_mask, block_mask_from_element_mask,
+                                 random_mask, values_for_mask)
+
+
+def _dense(n, pattern, seed):
+    return values_for_mask(pattern, seed=seed).astype(np.float32)
+
+
+def _pack(a, bs, cap):
+    return bsp.from_dense(jnp.asarray(a), bs, cap)
+
+
+class TestFormat:
+    @pytest.mark.parametrize("bs", [4, 8])
+    def test_roundtrip(self, bs):
+        a = _dense(64, banded_mask(64, 6), 0)
+        m = _pack(a, bs, 200)
+        np.testing.assert_allclose(bsp.to_dense(m), a)
+
+    def test_nnzb_counts_occupied(self):
+        a = _dense(64, banded_mask(64, 3), 1)
+        m = _pack(a, 8, 64)
+        occ = block_mask_from_element_mask(np.abs(a) > 0, 8)
+        assert int(m.nnzb) == occ.sum()
+
+    def test_slot_map_consistent(self):
+        a = _dense(64, random_mask(64, 0.1, seed=2), 2)
+        m = _pack(a, 8, 64)
+        slot = np.asarray(m.slot)
+        rows, cols = np.asarray(m.rows), np.asarray(m.cols)
+        for s in range(int(m.nnzb)):
+            assert slot[rows[s], cols[s]] == s
+        # padding coordinates resolve to -1
+        assert (slot[-1, :] == -1).all() and (slot[:, -1] == -1).all()
+
+    def test_capacity_padding_zero(self):
+        a = _dense(32, banded_mask(32, 2), 3)
+        m = _pack(a, 8, 50)
+        blocks = np.asarray(m.blocks)
+        assert np.all(blocks[int(m.nnzb):] == 0)
+
+    def test_from_blocks(self):
+        bs, grid = 4, 4
+        rows, cols = np.array([0, 2]), np.array([1, 3])
+        blocks = jnp.asarray(np.random.default_rng(0).standard_normal(
+            (2, bs, bs)), jnp.float32)
+        m = bsp.from_blocks(rows, cols, blocks, grid, cap=8)
+        d = np.asarray(bsp.to_dense(m))
+        np.testing.assert_allclose(d[0:4, 4:8], blocks[0])
+        np.testing.assert_allclose(d[8:12, 12:16], blocks[1])
+        assert (d != 0).sum() == (np.asarray(blocks) != 0).sum()
+
+    def test_jit_from_dense(self):
+        f = jax.jit(lambda x: bsp.from_dense(x, 8, 64).nnzb)
+        a = _dense(64, banded_mask(64, 3), 4)
+        assert int(f(jnp.asarray(a))) > 0
+
+
+class TestMaskPyramid:
+    def test_pyramid_levels(self):
+        mask = jnp.zeros((8, 8), bool).at[3, 5].set(True)
+        pyr = bsp.mask_pyramid(mask)
+        assert [p.shape[0] for p in pyr] == [8, 4, 2, 1]
+        assert bool(pyr[1][1, 2])    # (3//2, 5//2)
+        assert bool(pyr[2][0, 1])
+        assert bool(pyr[3][0, 0])
+        assert int(pyr[1].sum()) == 1
+
+    def test_pyramid_is_quadtree_nil_structure(self):
+        """False at a coarse level == NIL chunk for the whole subtree."""
+        mask = np.zeros((8, 8), bool)
+        mask[:4, :4] = np.random.default_rng(0).random((4, 4)) < 0.5
+        mask[0, 0] = True
+        pyr = bsp.mask_pyramid(jnp.asarray(mask))
+        assert not bool(pyr[2][0, 1])  # right half entirely NIL
+        assert not bool(pyr[2][1, 0])
+        assert not bool(pyr[2][1, 1])
+
+
+class TestPairEnumeration:
+    def _masks(self, n, bs, seed):
+        a = random_mask(n, 0.15, seed=seed)
+        b = random_mask(n, 0.15, seed=seed + 1)
+        return (block_mask_from_element_mask(a, bs),
+                block_mask_from_element_mask(b, bs))
+
+    def test_hier_matches_flat(self):
+        ma, mb = self._masks(64, 4, 0)
+        caps = bsp.plan_caps(ma, mb, slack=2.0)
+        ph, ch = bsp.enumerate_pairs_hier(jnp.asarray(ma), jnp.asarray(mb),
+                                          caps)
+        pf, cf = bsp.enumerate_pairs_flat(jnp.asarray(ma), jnp.asarray(mb),
+                                          caps[-1])
+        assert int(ch) == int(cf)
+        sh = {tuple(r) for r in np.asarray(ph)[:int(ch)]}
+        sf = {tuple(r) for r in np.asarray(pf)[:int(cf)]}
+        assert sh == sf
+
+    def test_counts_match_plan(self):
+        """Surviving triples per level == the paper's task counts."""
+        ma, mb = self._masks(64, 4, 3)
+        per = pair_counts_per_level(ma, mb)
+        # leaf level exact count = sum_k colA_k rowB_k
+        exact = int((ma.sum(0).astype(np.int64) * mb.sum(1)).sum())
+        assert per[max(per)] == exact
+
+    def test_empty_masks(self):
+        g = 8
+        z = jnp.zeros((g, g), bool)
+        caps = [8] * 3
+        pairs, cnt = bsp.enumerate_pairs_hier(z, z, caps)
+        assert int(cnt) == 0
+
+    def test_overflow_truncates_deterministically(self):
+        ma, mb = self._masks(64, 4, 5)
+        caps = bsp.plan_caps(ma, mb)
+        caps[-1] = 64  # force overflow at leaf level
+        pairs, cnt = bsp.enumerate_pairs_hier(jnp.asarray(ma),
+                                              jnp.asarray(mb), caps)
+        assert pairs.shape[0] == 64
+        assert int(cnt) > 64  # reports the true count for overflow detection
+
+
+class TestBsmm:
+    def _run(self, n, bs, pa, pb, hierarchical=True, use_pair_kernel=False):
+        a = values_for_mask(pa, seed=0).astype(np.float32)
+        b = values_for_mask(pb, seed=1).astype(np.float32)
+        ma = block_mask_from_element_mask(np.abs(a) > 0, bs)
+        mb = block_mask_from_element_mask(np.abs(b) > 0, bs)
+        caps = bsp.plan_caps(ma, mb)
+        cap_c = bsp.plan_c_cap(ma, mb)
+        cap_ab = max(int(ma.sum()), int(mb.sum()), 8)
+        A = _pack(a, bs, cap_ab)
+        B = _pack(b, bs, cap_ab)
+        c, info = bsmm(A, B, pair_caps=caps, cap_c=cap_c,
+                       hierarchical=hierarchical,
+                       use_pair_kernel=use_pair_kernel,
+                       interpret=use_pair_kernel)
+        return np.asarray(bsp.to_dense(c)), a @ b, info
+
+    def test_banded(self):
+        out, want, info = self._run(64, 4, banded_mask(64, 6),
+                                    banded_mask(64, 4))
+        np.testing.assert_allclose(out, want, atol=1e-4)
+        assert int(info["n_pairs"]) <= info["pair_cap"]
+
+    def test_random(self):
+        out, want, _ = self._run(64, 8, random_mask(64, 0.1, seed=3),
+                                 random_mask(64, 0.15, seed=4))
+        np.testing.assert_allclose(out, want, atol=1e-4)
+
+    def test_flat_matches_hier(self):
+        o1, want, _ = self._run(64, 4, banded_mask(64, 5),
+                                random_mask(64, 0.1, seed=5))
+        o2, _, _ = self._run(64, 4, banded_mask(64, 5),
+                             random_mask(64, 0.1, seed=5),
+                             hierarchical=False)
+        np.testing.assert_allclose(o1, want, atol=1e-4)
+        np.testing.assert_allclose(o1, o2, atol=1e-5)
+
+    def test_pair_kernel_path(self):
+        out, want, _ = self._run(64, 8, banded_mask(64, 8),
+                                 banded_mask(64, 8), use_pair_kernel=True)
+        np.testing.assert_allclose(out, want, atol=1e-4)
+
+    def test_c_structure(self):
+        ma = jnp.asarray(np.eye(4, dtype=bool))
+        mb = jnp.asarray(np.eye(4, dtype=bool))
+        rows, cols, slot, cnt = compute_c_structure(ma, mb, 8)
+        assert int(cnt) == 4
+        assert np.all(np.asarray(rows)[:4] == np.asarray(cols)[:4])
+
+    def test_useful_flops(self):
+        ma = np.eye(4, dtype=bool)
+        assert useful_flops(ma, ma, 8) == 2.0 * 8 ** 3 * 4
+
+    def test_end_to_end_jit_wrapper(self):
+        a = values_for_mask(banded_mask(32, 3), seed=7).astype(np.float32)
+        ma = block_mask_from_element_mask(np.abs(a) > 0, 4)
+        caps = tuple(bsp.plan_caps(ma, ma))
+        out, info = bsmm_from_dense(
+            jnp.asarray(a), jnp.asarray(a), bs=4, cap_a=64, cap_b=64,
+            cap_c=bsp.plan_c_cap(ma, ma), pair_caps=caps)
+        np.testing.assert_allclose(np.asarray(out), a @ a, atol=1e-4)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 1000), fill=st.floats(0.05, 0.5),
+       bs=st.sampled_from([4, 8]))
+def test_property_bsmm_matches_dense(seed, fill, bs):
+    n = 32
+    a = values_for_mask(random_mask(n, fill, seed=seed),
+                        seed=seed).astype(np.float32)
+    b = values_for_mask(random_mask(n, fill, seed=seed + 1),
+                        seed=seed + 1).astype(np.float32)
+    ma = block_mask_from_element_mask(np.abs(a) > 0, bs)
+    mb = block_mask_from_element_mask(np.abs(b) > 0, bs)
+    caps = bsp.plan_caps(ma, mb)
+    A = bsp.from_dense(jnp.asarray(a), bs, (n // bs) ** 2)
+    B = bsp.from_dense(jnp.asarray(b), bs, (n // bs) ** 2)
+    c, _ = bsmm(A, B, pair_caps=caps, cap_c=bsp.plan_c_cap(ma, mb))
+    np.testing.assert_allclose(np.asarray(bsp.to_dense(c)), a @ b, atol=1e-3)

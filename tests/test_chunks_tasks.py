@@ -1,0 +1,143 @@
+"""Chunks-and-Tasks runtime semantics + work-stealing cluster simulation."""
+import numpy as np
+
+from repro.core.chunks import ChunkStore, ChunkId
+from repro.core.tasks import CTGraph, ClusterSim, CostModel
+from repro.core.quadtree import QTParams, qt_from_dense, qt_to_dense
+from repro.core.multiply import qt_multiply, qt_sym_square
+from repro.core.patterns import banded_mask, values_for_mask
+
+
+class _Blob:
+    def __init__(self, nb):
+        self._nb = nb
+
+    def nbytes(self):
+        return self._nb
+
+
+class TestChunkStore:
+    def test_owner_embedded_in_id(self):
+        st = ChunkStore(4)
+        cid = st.register(2, _Blob(100))
+        assert isinstance(cid, ChunkId)
+        assert cid.owner == 2
+
+    def test_register_is_local_no_comm(self):
+        st = ChunkStore(4)
+        st.register(1, _Blob(1000))
+        assert st.total_bytes_received() == 0
+
+    def test_remote_fetch_accounted_once_with_cache(self):
+        st = ChunkStore(2)
+        cid = st.register(0, _Blob(512))
+        st.fetch(1, cid)
+        st.fetch(1, cid)  # cache hit
+        assert st.stats[1].bytes_received == 512
+        assert st.stats[1].messages_received == 1
+        assert st.stats[1].cache_hits == 1
+
+    def test_local_fetch_free(self):
+        st = ChunkStore(2)
+        cid = st.register(0, _Blob(512))
+        st.fetch(0, cid)
+        assert st.stats[0].bytes_received == 0
+        assert st.stats[0].bytes_received_local == 512
+
+    def test_cache_eviction_lru(self):
+        st = ChunkStore(2, cache_bytes=1000)
+        a = st.register(0, _Blob(600))
+        b = st.register(0, _Blob(600))
+        st.fetch(1, a)
+        st.fetch(1, b)   # evicts a
+        st.fetch(1, a)   # re-fetch: comm again
+        assert st.stats[1].bytes_received == 1800
+
+    def test_nil_fetch_returns_none(self):
+        st = ChunkStore(1)
+        assert st.fetch(0, None) is None
+
+    def test_peak_owned_tracks_frees(self):
+        st = ChunkStore(1)
+        a = st.register(0, _Blob(100))
+        b = st.register(0, _Blob(200))
+        st.free(a)
+        c = st.register(0, _Blob(50))
+        assert st.stats[0].peak_owned_bytes == 300
+        assert st.stats[0].owned_bytes == 250
+        st.free(b), st.free(c)
+        assert st.stats[0].owned_bytes == 0
+
+
+def _build_and_multiply(n=128, d=5, p=4, seed=0):
+    params = QTParams(n, 16, 4)
+    a = values_for_mask(banded_mask(n, d), seed=1)
+    g = CTGraph()
+    ra = qt_from_dense(g, a, params)
+    rb = qt_from_dense(g, a, params)
+    sim = ClusterSim(p, seed=seed)
+    sim.run(g)           # build phase places input chunks
+    sim.reset_stats()
+    n_build = len(g.nodes)
+    rc = qt_multiply(g, params, ra, rb)
+    res = sim.run(g)     # multiply phase
+    return g, params, a, rc, sim, res, n_build
+
+
+class TestClusterSim:
+    def test_all_tasks_executed(self):
+        g, _, _, _, _, res, n_build = _build_and_multiply()
+        assert sum(res.tasks_per_worker) == len(g.nodes) - n_build
+
+    def test_correctness_independent_of_schedule(self):
+        g, params, a, rc, _, _, _ = _build_and_multiply(seed=0)
+        out = qt_to_dense(g, rc, params)
+        np.testing.assert_allclose(out, a @ a, atol=1e-12)
+
+    def test_single_worker_no_comm(self):
+        _, _, _, _, _, res, _ = _build_and_multiply(p=1)
+        assert res.bytes_received == [0]
+        assert res.steals == 0
+
+    def test_multi_worker_balances_work(self):
+        _, _, _, _, _, res, _ = _build_and_multiply(n=256, p=4)
+        t = res.tasks_per_worker
+        assert min(t) > 0            # everyone got work via stealing
+        assert res.steals > 0
+
+    def test_makespan_shrinks_with_workers(self):
+        _, _, _, _, _, r1, _ = _build_and_multiply(n=256, p=1)
+        _, _, _, _, _, r8, _ = _build_and_multiply(n=256, p=8)
+        assert r8.makespan < r1.makespan
+
+    def test_comm_deterministic_given_seed(self):
+        _, _, _, _, _, ra, _ = _build_and_multiply(seed=7)
+        _, _, _, _, _, rb, _ = _build_and_multiply(seed=7)
+        assert ra.bytes_received == rb.bytes_received
+        assert ra.makespan == rb.makespan
+
+    def test_chunk_placement_follows_execution(self):
+        """Chunks are owned by the worker that ran the producing task."""
+        g, params, a, rc, sim, _, _ = _build_and_multiply()
+        for nid, cid in sim.placement.items():
+            owner_node = sim._owner_of_node[g.resolve(nid)]
+            assert cid.owner == owner_node
+
+    def test_symmetric_square_in_sim(self):
+        n = 128
+        params = QTParams(n, 16, 4)
+        s = values_for_mask(banded_mask(n, 5), seed=2, symmetric=True)
+        g = CTGraph()
+        rs = qt_from_dense(g, s, params, upper=True)
+        sim = ClusterSim(4)
+        sim.run(g)
+        rc = qt_sym_square(g, params, rs)
+        sim.run(g)
+        np.testing.assert_allclose(qt_to_dense(g, rc, params), s @ s,
+                                   atol=1e-12)
+
+    def test_cost_model_fields(self):
+        cm = CostModel(flops_per_s=1e9, task_overhead_s=0.0)
+        _, _, _, _, _, res, _ = _build_and_multiply()
+        assert res.makespan > 0
+        assert all(0 <= f <= 1.0 + 1e-9 for f in res.active_fraction)

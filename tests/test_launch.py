@@ -1,0 +1,188 @@
+"""Launch layer: sharding rules, roofline parser, report collation."""
+import json
+import os
+import pathlib
+import subprocess
+import sys
+
+import jax
+import numpy as np
+import pytest
+
+from repro.launch import roofline as RL
+from repro.configs import ARCH_IDS, get_config
+from repro.launch.sharding import _fix_spec, _trailing_rule
+from repro.models.config import SHAPES_BY_NAME, applicable_shapes
+
+
+class TestRooflineParser:
+    HLO = """
+HloModule test
+  %pp = f32[56,8,8]{2,1,0} collective-permute(%x), channel_id=1
+  %ag = bf16[4096,128]{1,0} all-gather(%y), dimensions={0}
+  %ar.start = f32[1024]{0} all-reduce-start(%z)
+  %ar.done = f32[1024]{0} all-reduce-done(%ar.start)
+  %rs = f32[256]{0} reduce-scatter(%w), dimensions={0}
+  %aa = s32[64]{0} all-to-all(%v), dimensions={0}
+  %dot = f32[128,128]{1,0} dot(%a, %b)
+"""
+
+    def test_collective_bytes(self):
+        per, counts = RL.collective_bytes(self.HLO, per_op=True)
+        assert per["collective-permute"] == 56 * 8 * 8 * 4
+        assert per["all-gather"] == 4096 * 128 * 2
+        assert per["all-reduce"] == 1024 * 4      # -start counted, -done not
+        assert counts["all-reduce"] == 1
+        assert per["reduce-scatter"] == 256 * 4
+        assert per["all-to-all"] == 64 * 4
+
+    def test_dot_not_counted(self):
+        total = RL.collective_bytes("%d = f32[8,8]{1,0} dot(%a, %b)")
+        assert total == 0
+
+    def test_roofline_terms(self):
+        rf = RL.Roofline(flops=197e12, hbm_bytes=819e9, coll_bytes=50e9,
+                         n_chips=4, hw=RL.Hardware(), model_flops=4e14)
+        assert abs(rf.t_compute - 1.0) < 1e-9
+        assert abs(rf.t_memory - 1.0) < 1e-9
+        assert abs(rf.t_collective - 1.0) < 1e-9
+        assert rf.useful_fraction == pytest.approx(4e14 / (197e12 * 4))
+
+    def test_bottleneck_selection(self):
+        rf = RL.Roofline(flops=1, hbm_bytes=1e12, coll_bytes=1,
+                         n_chips=1, hw=RL.Hardware())
+        assert rf.bottleneck == "memory"
+
+
+class TestShardingRules:
+    def test_fix_spec_moves_to_divisible_dim(self):
+        mesh = jax.make_mesh((1,), ("model",))
+
+        class FakeMesh:
+            shape = {"model": 16}
+
+        spec = _fix_spec(FakeMesh(), (28, 128, 32768, 8, 128),
+                         [None, None, None, "model", None])
+        # kv=8 not divisible by 16 -> moved to hd=128 (trailing preference)
+        assert spec == [None, None, None, None, "model"]
+
+    def test_fix_spec_drops_when_nothing_fits(self):
+        class FakeMesh:
+            shape = {"model": 16}
+
+        spec = _fix_spec(FakeMesh(), (3, 5), ["model", None])
+        assert spec == [None, None]
+
+    def test_trailing_rules_cover_all_param_names(self):
+        from repro.models import model as M
+        for arch in ARCH_IDS:
+            cfg = get_config(arch)
+            shapes = M.param_shapes(cfg)
+
+            def walk(d):
+                for k, v in d.items():
+                    if isinstance(v, dict):
+                        walk(v)
+                    else:
+                        rule = _trailing_rule(cfg, k, v)
+                        assert len(rule) <= len(v), (arch, k, v, rule)
+
+            walk(shapes)
+
+    @pytest.mark.parametrize("arch", ["llama3_2_3b", "phi3_5_moe",
+                                      "falcon_mamba_7b", "zamba2_2_7b"])
+    def test_big_params_are_model_sharded(self, arch):
+        """Every >=8M-element param must be sharded on some axis."""
+        from repro.models import model as M
+        from repro.launch.sharding import param_spec
+
+        class FakeMesh:
+            shape = {"model": 16}
+
+        cfg = get_config(arch)
+        shapes = M.param_shapes(cfg)
+
+        def walk(d, path=()):
+            for k, v in d.items():
+                if isinstance(v, dict):
+                    walk(v, path + (k,))
+                else:
+                    n = int(np.prod(v))
+                    if n >= (1 << 23):
+                        rule = _trailing_rule(cfg, k, v)
+                        assert any(r is not None for r in rule), \
+                            (arch, k, v)
+
+        walk(shapes)
+
+
+class TestTrainStepOn8Devices:
+    """End-to-end sharded train step on virtual devices (subprocess)."""
+
+    def test_sharded_train_step(self):
+        script = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax, jax.numpy as jnp, numpy as np
+from repro.configs import get_smoke_config
+from repro.launch.sharding import TrainStep
+from repro.models import model as M
+from repro.models.config import ShapeSpec
+from repro.optim import adamw_init
+
+cfg = get_smoke_config("llama3_2_3b")
+mesh = jax.make_mesh((4, 2), ("data", "model"))
+shape = ShapeSpec("t", "train", 64, 8)
+b = TrainStep(cfg, mesh, zero1=True)
+params = M.init_params(cfg, jax.random.PRNGKey(0))
+ps = b.param_shardings()
+params = jax.tree.map(jax.device_put, params, ps)
+opt = adamw_init(params)
+opt = jax.device_put(opt, b.opt_shardings())
+rng = np.random.default_rng(0)
+batch = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab, (8, 64)),
+                               jnp.int32),
+         "targets": jnp.asarray(rng.integers(0, cfg.vocab, (8, 64)),
+                                jnp.int32)}
+batch = jax.device_put(batch, jax.tree.map(lambda s: s.sharding,
+                                           b.batch_shardings(shape)))
+step = b.jitted(shape, donate=False)
+l0 = None
+for i in range(4):
+    params, opt, metrics = step(params, opt, batch)
+    if l0 is None:
+        l0 = float(metrics["loss"])
+l1 = float(metrics["loss"])
+assert np.isfinite(l0) and np.isfinite(l1) and l1 < l0, (l0, l1)
+print("OK sharded_train_step", l0, "->", l1)
+"""
+        env = dict(os.environ)
+        env["PYTHONPATH"] = str(pathlib.Path(__file__).parents[1] / "src")
+        res = subprocess.run([sys.executable, "-c", script],
+                             capture_output=True, text=True, env=env,
+                             timeout=900)
+        assert res.returncode == 0, res.stderr[-2000:]
+        assert "OK sharded_train_step" in res.stdout
+
+
+class TestReport:
+    def test_report_tables(self, tmp_path):
+        row = {
+            "arch": "olmo_1b", "shape": "train_4k", "mesh": "16x16",
+            "n_chips": 256, "t_lower_s": 1, "t_compile_s": 8,
+            "mem": {"argument_bytes": 1 << 28, "output_bytes": 0,
+                    "temp_bytes": 1 << 30,
+                    "peak_bytes": (1 << 28) + (1 << 30)},
+            "collective_counts": {"all-reduce": 3},
+            "roofline": {"t_compute_s": 0.1, "t_memory_s": 0.2,
+                         "t_collective_s": 0.05, "bottleneck": "memory",
+                         "dev_gflops": 1.0, "dev_hbm_gb": 1.0,
+                         "dev_coll_gb": 0.1, "model_gflops": 100.0,
+                         "useful_fraction": 0.5, "mfu_bound": 0.1},
+        }
+        (tmp_path / "olmo.json").write_text(json.dumps(row))
+        from repro.launch import report
+        rows = report.load(tmp_path)
+        t1 = report.dryrun_table(rows)
+        t2 = report.roofline_table(rows)
+        assert "olmo_1b" in t1 and "memory" in t2

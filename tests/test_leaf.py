@@ -1,0 +1,168 @@
+"""Block-sparse leaf matrix library vs dense numpy (paper §4.1, Fig 2)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.leaf import (LeafMatrix, LeafStats, leaf_add, leaf_multiply,
+                             leaf_scale, leaf_sym_multiply, leaf_sym_square,
+                             leaf_syrk, leaf_truncate, multiply_batches)
+from repro.core.patterns import (banded_mask, random_mask,
+                                 random_symmetric_mask, values_for_mask)
+
+
+def _mk(n, bs, fill, seed, symmetric=False, upper=False):
+    mask = random_mask(n, fill, seed=seed)
+    if symmetric:
+        mask = mask | mask.T
+    a = values_for_mask(mask, seed=seed, symmetric=symmetric)
+    return LeafMatrix.from_dense(a, bs, upper=upper), a
+
+
+class TestRoundtrip:
+    @pytest.mark.parametrize("bs", [2, 4, 8])
+    def test_dense_roundtrip(self, bs):
+        m, a = _mk(32, bs, 0.2, 0)
+        np.testing.assert_allclose(m.to_dense(), a)
+
+    def test_upper_roundtrip(self):
+        m, a = _mk(32, 4, 0.3, 1, symmetric=True, upper=True)
+        np.testing.assert_allclose(m.to_dense(), a)
+
+    def test_zero_blocks_not_stored(self):
+        a = np.zeros((32, 32))
+        a[0, 0] = 1.0
+        m = LeafMatrix.from_dense(a, 4)
+        assert m.n_nonzero_blocks() == 1
+
+
+class TestOps:
+    def test_multiply(self):
+        ma, a = _mk(32, 4, 0.3, 2)
+        mb, b = _mk(32, 4, 0.3, 3)
+        st_ = LeafStats()
+        c = leaf_multiply(ma, mb, stats=st_)
+        np.testing.assert_allclose(c.to_dense(), a @ b, atol=1e-12)
+        assert st_.block_multiplies > 0
+        assert st_.flops == 2.0 * st_.block_multiplies * 4 ** 3
+
+    @pytest.mark.parametrize("ta,tb", [(True, False), (False, True),
+                                       (True, True)])
+    def test_multiply_transposed(self, ta, tb):
+        ma, a = _mk(32, 4, 0.3, 4)
+        mb, b = _mk(32, 4, 0.3, 5)
+        c = leaf_multiply(ma, mb, ta=ta, tb=tb)
+        ref = (a.T if ta else a) @ (b.T if tb else b)
+        np.testing.assert_allclose(c.to_dense(), ref, atol=1e-12)
+
+    def test_add(self):
+        ma, a = _mk(32, 4, 0.2, 6)
+        mb, b = _mk(32, 4, 0.2, 7)
+        np.testing.assert_allclose(leaf_add(ma, mb).to_dense(), a + b)
+
+    def test_add_nil(self):
+        ma, a = _mk(32, 4, 0.2, 8)
+        assert leaf_add(ma, None) is ma
+        assert leaf_add(None, ma) is ma
+        assert leaf_add(None, None) is None
+
+    def test_sym_square(self):
+        mu, s = _mk(32, 4, 0.3, 9, symmetric=True, upper=True)
+        st_ = LeafStats()
+        c = leaf_sym_square(mu, stats=st_)
+        assert c.upper
+        np.testing.assert_allclose(c.to_dense(), s @ s, atol=1e-12)
+
+    def test_sym_square_halves_work(self):
+        mu, s = _mk(32, 4, 0.6, 10, symmetric=True, upper=True)
+        st_sym = LeafStats()
+        leaf_sym_square(mu, stats=st_sym)
+        full = LeafMatrix.from_dense(s, 4)
+        st_reg = LeafStats()
+        leaf_multiply(full, full, stats=st_reg)
+        assert st_sym.block_multiplies < 0.75 * st_reg.block_multiplies
+
+    @pytest.mark.parametrize("trans", [False, True])
+    def test_syrk(self, trans):
+        ma, a = _mk(32, 4, 0.3, 11)
+        c = leaf_syrk(ma, trans=trans)
+        ref = a.T @ a if trans else a @ a.T
+        np.testing.assert_allclose(c.to_dense(), ref, atol=1e-12)
+
+    @pytest.mark.parametrize("side", ["left", "right"])
+    def test_sym_multiply(self, side):
+        ms, s = _mk(32, 4, 0.3, 12, symmetric=True, upper=True)
+        mb, b = _mk(32, 4, 0.3, 13)
+        c = leaf_sym_multiply(ms, mb, side=side)
+        ref = s @ b if side == "left" else b @ s
+        np.testing.assert_allclose(c.to_dense(), ref, atol=1e-12)
+
+    def test_scale(self):
+        ma, a = _mk(32, 4, 0.2, 14)
+        np.testing.assert_allclose(leaf_scale(ma, -2.5).to_dense(), -2.5 * a)
+
+    def test_truncate_frobenius(self):
+        """§6.2: dropped blocks' Frobenius norm stays within tau."""
+        ma, a = _mk(32, 4, 0.5, 15)
+        tau = 0.5 * np.linalg.norm(a, "fro")
+        t = leaf_truncate(ma, tau)
+        err = np.linalg.norm(t.to_dense() - a, "fro")
+        assert err <= tau + 1e-12
+        assert t.n_nonzero_blocks() < ma.n_nonzero_blocks()
+
+
+class TestBatchedSchedule:
+    """Fig 2: multiplication as a sum of outer products; within-batch
+    independence (no two multiplies in a batch write the same C block)."""
+
+    def test_batches_cover_all_products(self):
+        ma, a = _mk(32, 4, 0.4, 16)
+        mb, b = _mk(32, 4, 0.4, 17)
+        prods = set()
+        for batch in multiply_batches(ma, mb):
+            for (i, j, k) in batch:
+                assert (i, k) in ma.blocks and (k, j) in mb.blocks
+                prods.add((i, j, k))
+        expect = {(i, j, k)
+                  for (i, k) in ma.blocks for (k2, j) in mb.blocks
+                  if k2 == k}
+        assert prods == expect
+
+    def test_within_batch_outputs_distinct(self):
+        ma, _ = _mk(32, 4, 0.5, 18)
+        mb, _ = _mk(32, 4, 0.5, 19)
+        for batch in multiply_batches(ma, mb):
+            outs = [(i, j) for (i, j, k) in batch]
+            assert len(outs) == len(set(outs))
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    bs=st.sampled_from([2, 4]),
+    grid=st.integers(2, 6),
+    fill=st.floats(0.05, 0.9),
+    seed=st.integers(0, 2 ** 16),
+)
+def test_property_multiply_matches_dense(bs, grid, fill, seed):
+    n = bs * grid
+    a = values_for_mask(random_mask(n, fill, seed=seed), seed=seed)
+    b = values_for_mask(random_mask(n, fill, seed=seed + 1), seed=seed + 1)
+    ma = LeafMatrix.from_dense(a, bs)
+    mb = LeafMatrix.from_dense(b, bs)
+    np.testing.assert_allclose(leaf_multiply(ma, mb).to_dense(), a @ b,
+                               atol=1e-10)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    grid=st.integers(2, 6),
+    fill=st.floats(0.05, 0.9),
+    seed=st.integers(0, 2 ** 16),
+)
+def test_property_sym_square_matches_dense(grid, fill, seed):
+    bs = 4
+    n = bs * grid
+    s = values_for_mask(random_symmetric_mask(n, fill, seed=seed),
+                        seed=seed, symmetric=True)
+    mu = LeafMatrix.from_dense(s, bs, upper=True)
+    np.testing.assert_allclose(leaf_sym_square(mu).to_dense(), s @ s,
+                               atol=1e-10)

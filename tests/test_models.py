@@ -1,0 +1,228 @@
+"""Per-arch smoke tests + model-level invariants (reduced configs, CPU)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import ARCH_IDS, get_config, get_smoke_config
+from repro.models import layers as L
+from repro.models import model as M
+from repro.models import ssm
+from repro.models.config import (ALL_SHAPES, applicable_shapes,
+                                 input_specs, SHAPES_BY_NAME)
+
+
+def _batch_for(cfg, b, s, seed=0):
+    rng = np.random.default_rng(seed)
+    if cfg.frontend == "frames":
+        return {"frames": jnp.asarray(
+            rng.standard_normal((b, s, cfg.d_model)), cfg.jdtype),
+            "targets": jnp.asarray(rng.integers(0, cfg.vocab, (b, s)),
+                                   jnp.int32)}
+    if cfg.frontend == "patches":
+        st_ = s - cfg.n_patches
+        return {"tokens": jnp.asarray(
+            rng.integers(0, cfg.vocab, (b, st_)), jnp.int32),
+            "patches": jnp.asarray(
+                rng.standard_normal((b, cfg.n_patches, cfg.d_model)),
+                cfg.jdtype),
+            "targets": jnp.asarray(rng.integers(0, cfg.vocab, (b, st_)),
+                                   jnp.int32)}
+    return {"tokens": jnp.asarray(rng.integers(0, cfg.vocab, (b, s)),
+                                  jnp.int32),
+            "targets": jnp.asarray(rng.integers(0, cfg.vocab, (b, s)),
+                                   jnp.int32)}
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+class TestArchSmoke:
+    """REQUIRED per-arch smoke: reduced config, one forward/train step,
+    output shapes + no NaNs."""
+
+    def test_forward_shapes_and_finite(self, arch):
+        cfg = get_smoke_config(arch)
+        params = M.init_params(cfg, jax.random.PRNGKey(0))
+        batch = _batch_for(cfg, 2, 64)
+        logits, aux = M.forward(cfg, params, batch)
+        s_out = 64 if cfg.frontend != "patches" else 64
+        assert logits.shape == (2, s_out, cfg.vocab)
+        assert np.isfinite(np.asarray(logits, np.float32)).all()
+
+    def test_train_step_decreases_loss(self, arch):
+        cfg = get_smoke_config(arch)
+        params = M.init_params(cfg, jax.random.PRNGKey(0))
+        batch = _batch_for(cfg, 2, 64)
+
+        @jax.jit
+        def step(p):
+            (loss, _), g = jax.value_and_grad(
+                lambda q: M.loss_fn(cfg, q, batch), has_aux=True)(p)
+            p = jax.tree.map(
+                lambda w, gw: (w.astype(jnp.float32)
+                               - 0.2 * gw.astype(jnp.float32)
+                               ).astype(w.dtype), p, g)
+            return loss, p
+
+        l0, params = step(params)
+        for _ in range(3):
+            l1, params = step(params)
+        assert np.isfinite(float(l0)) and np.isfinite(float(l1))
+        assert float(l1) < float(l0)
+
+    def test_decode_step(self, arch):
+        cfg = get_smoke_config(arch)
+        if cfg.is_encoder_only:
+            pytest.skip("encoder-only: no decode step")
+        params = M.init_params(cfg, jax.random.PRNGKey(0))
+        cache = M.init_cache(cfg, 2, 16)
+        logits, cache2 = M.decode_step(
+            cfg, params, jnp.zeros((2,), jnp.int32), cache, jnp.int32(0))
+        assert logits.shape == (2, cfg.vocab)
+        assert np.isfinite(np.asarray(logits)).all()
+        assert jax.tree.structure(cache) == jax.tree.structure(cache2)
+
+    def test_full_config_param_count_plausible(self, arch):
+        cfg = get_config(arch)
+        n = cfg.param_count()
+        # billions within the advertised ballpark
+        expected = {
+            "llama3_2_3b": 3.2e9, "stablelm_12b": 11.6e9,
+            "h2o_danube3_4b": 3.8e9, "olmo_1b": 1.2e9,
+            "phi3_5_moe": 42e9, "mixtral_8x7b": 47e9,
+            "hubert_xlarge": 0.95e9, "falcon_mamba_7b": 7e9,
+            "zamba2_2_7b": 2.4e9, "internvl2_2b": 1.7e9,
+        }[arch]
+        assert 0.7 * expected < n < 1.35 * expected
+
+    def test_applicable_shapes_policy(self, arch):
+        cfg = get_config(arch)
+        names = {s.name for s in applicable_shapes(cfg)}
+        assert {"train_4k", "prefill_32k"} <= names
+        if cfg.is_encoder_only:
+            assert "decode_32k" not in names
+        if cfg.mixer == "attention" and not cfg.swa_window:
+            assert "long_500k" not in names      # quadratic attention skip
+        if cfg.mixer in ("mamba1", "mamba2"):
+            assert "long_500k" in names
+
+    def test_input_specs_no_allocation(self, arch):
+        cfg = get_config(arch)
+        for shape in applicable_shapes(cfg):
+            specs = input_specs(cfg, shape)
+            for v in jax.tree.leaves(specs):
+                assert isinstance(v, jax.ShapeDtypeStruct)
+
+
+class TestDecodeConsistency:
+    """Token-by-token decode reproduces the full forward pass."""
+
+    @pytest.mark.parametrize("arch", ["llama3_2_3b", "h2o_danube3_4b",
+                                      "falcon_mamba_7b", "zamba2_2_7b",
+                                      "phi3_5_moe"])
+    def test_decode_matches_forward(self, arch):
+        cfg = get_smoke_config(arch)
+        params = M.init_params(cfg, jax.random.PRNGKey(1))
+        s = 16
+        rng = np.random.default_rng(2)
+        tokens = rng.integers(0, cfg.vocab, (2, s)).astype(np.int32)
+        logits_full, _ = M.forward(cfg, params,
+                                   {"tokens": jnp.asarray(tokens)},
+                                   remat=False)
+        cache = M.init_cache(cfg, 2, s)
+        outs = []
+        for t in range(s):
+            lg, cache = M.decode_step(cfg, params,
+                                      jnp.asarray(tokens[:, t]), cache,
+                                      jnp.int32(t))
+            outs.append(lg)
+        logits_dec = jnp.stack(outs, axis=1)
+        np.testing.assert_allclose(
+            np.asarray(logits_dec, np.float32),
+            np.asarray(logits_full, np.float32), atol=2e-2, rtol=1e-2)
+
+
+class TestLayerInvariants:
+    def test_rmsnorm_scale_identity_at_zero(self):
+        x = jnp.asarray(np.random.default_rng(0).standard_normal((4, 8)),
+                        jnp.float32)
+        out = L.rms_norm(x, jnp.zeros((8,)))
+        norm = np.sqrt((np.asarray(out) ** 2).mean(-1))
+        np.testing.assert_allclose(norm, 1.0, atol=1e-4)
+
+    def test_nonparam_ln_zero_mean_unit_var(self):
+        x = jnp.asarray(np.random.default_rng(1).standard_normal((4, 32)),
+                        jnp.float32)
+        out = np.asarray(L.nonparam_layer_norm(x))
+        np.testing.assert_allclose(out.mean(-1), 0.0, atol=1e-5)
+        np.testing.assert_allclose(out.var(-1), 1.0, atol=1e-3)
+
+    def test_rope_preserves_norm_and_relativity(self):
+        """RoPE is a rotation (norm preserved); scores depend only on
+        relative positions."""
+        rng = np.random.default_rng(3)
+        hd = 8
+        q = jnp.asarray(rng.standard_normal((1, 4, 1, hd)), jnp.float32)
+        pos0 = jnp.asarray([[0, 1, 2, 3]])
+        pos5 = pos0 + 5
+        q0 = L.apply_rope(q, pos0, 1e4)
+        q5 = L.apply_rope(q, pos5, 1e4)
+        np.testing.assert_allclose(
+            np.linalg.norm(np.asarray(q0), axis=-1),
+            np.linalg.norm(np.asarray(q), axis=-1), rtol=1e-5)
+        # relative dot products invariant to absolute offset
+        d0 = np.einsum("bshd,bthd->bst", np.asarray(q0), np.asarray(q0))
+        d5 = np.einsum("bshd,bthd->bst", np.asarray(q5), np.asarray(q5))
+        np.testing.assert_allclose(d0, d5, atol=1e-4)
+
+    def test_moe_capacity_drop(self):
+        """Over-capacity tokens contribute zero, never garbage."""
+        rng = np.random.default_rng(4)
+        # capacity rounds up to 16 for TP-shardability; 64 tokens on one
+        # preferred expert still overflow it
+        t, d, e, ff = 64, 4, 2, 8
+        x = jnp.asarray(rng.standard_normal((t, d)), jnp.float32)
+        rw = jnp.asarray(np.stack([np.ones(d), -np.ones(d)], 1),
+                         jnp.float32)  # all tokens prefer expert 0 or 1
+        wg = jnp.asarray(rng.standard_normal((e, d, ff)), jnp.float32)
+        wu = jnp.asarray(rng.standard_normal((e, d, ff)), jnp.float32)
+        wd = jnp.asarray(rng.standard_normal((e, ff, d)), jnp.float32)
+        out, _ = L.moe_ffn(x, rw, wg, wu, wd, top_k=1,
+                           capacity_factor=0.25)
+        assert np.isfinite(np.asarray(out)).all()
+        # at least some tokens dropped -> some rows exactly zero
+        zeros = (np.abs(np.asarray(out)).sum(-1) == 0).sum()
+        assert zeros > 0
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 1000), s=st.sampled_from([8, 16]))
+def test_property_ssm_step_matches_forward(seed, s):
+    """mamba1 chunked forward == sequential stepping (any chunking)."""
+    rng = np.random.default_rng(seed)
+    d, di, n, k, dtr = 4, 8, 2, 3, 2
+    p = {
+        "in_proj": jnp.asarray(rng.standard_normal((d, 2 * di)) * .3,
+                               jnp.float32),
+        "conv": jnp.asarray(rng.standard_normal((di, k)) * .3, jnp.float32),
+        "x_proj": jnp.asarray(rng.standard_normal((di, dtr + 2 * n)) * .3,
+                              jnp.float32),
+        "dt_proj": jnp.asarray(rng.standard_normal((dtr, di)) * .3,
+                               jnp.float32),
+        "dt_bias": jnp.zeros((di,), jnp.float32),
+        "A_log": jnp.zeros((di, n), jnp.float32),
+        "D": jnp.zeros((di,), jnp.float32),
+        "out_proj": jnp.asarray(rng.standard_normal((di, d)) * .3,
+                                jnp.float32),
+    }
+    u = jnp.asarray(rng.standard_normal((1, s, d)), jnp.float32)
+    y_full = ssm.mamba1_forward(p, u, state=n, chunk=4)
+    stt = ssm.MambaState(jnp.zeros((1, k - 1, di)), jnp.zeros((1, di, n)))
+    ys = []
+    for t in range(s):
+        y, stt = ssm.mamba1_step(p, u[:, t], stt, state=n)
+        ys.append(y)
+    np.testing.assert_allclose(np.asarray(jnp.stack(ys, 1)),
+                               np.asarray(y_full), atol=1e-5)

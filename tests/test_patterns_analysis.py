@@ -1,0 +1,157 @@
+"""Sparsity generators + §5 cost-analysis formulas vs exact counts."""
+import numpy as np
+import pytest
+
+from repro.core import analysis as an
+from repro.core.patterns import (banded_mask, banded_pairs,
+                                 block_mask_from_element_mask,
+                                 divide_space_order, overlap_mask,
+                                 overlap_pairs, particle_cloud, random_mask,
+                                 rmat_mask, rmat_pairs, values_for_mask)
+from repro.core.tasks import CTGraph
+from repro.core.quadtree import QTParams, qt_from_dense
+from repro.core.multiply import count_tasks_per_level, qt_multiply
+
+
+class TestPatterns:
+    def test_banded_pairs_match_mask(self):
+        n, d = 64, 5
+        mask = banded_mask(n, d)
+        rows, cols = banded_pairs(n, d)
+        m2 = np.zeros((n, n), dtype=bool)
+        m2[rows, cols] = True
+        assert np.array_equal(mask, m2)
+
+    @pytest.mark.parametrize("dim", [1, 2, 3])
+    def test_overlap_pairs_match_mask(self, dim):
+        coords = particle_cloud([64, 8, 4][dim - 1], dim, seed=1)
+        order = divide_space_order(coords)
+        mask = overlap_mask(coords, 4.0, order=order)
+        rows, cols = overlap_pairs(coords, 4.0, order=order)
+        m2 = np.zeros_like(mask)
+        m2[rows, cols] = True
+        assert np.array_equal(mask, m2)
+
+    def test_overlap_symmetric_with_diagonal(self):
+        coords = particle_cloud(32, 1, seed=2)
+        mask = overlap_mask(coords, 4.0)
+        assert np.array_equal(mask, mask.T)
+        assert mask.diagonal().all()
+
+    def test_divide_space_order_locality(self):
+        """Consecutive indices in the ordering are spatially close."""
+        coords = particle_cloud(128, 1, seed=3)
+        order = divide_space_order(coords)
+        pts = coords[order][:, 0]
+        jumps = np.abs(np.diff(pts))
+        assert np.median(jumps) < 4.0  # grid spacing 2, local moves dominate
+
+    def test_rmat_mask_pairs_consistent(self):
+        m = rmat_mask(8, 5.0, 0.5, seed=4)
+        rows, cols = rmat_pairs(8, 5.0, 0.5, seed=4)
+        m2 = np.zeros_like(m)
+        m2[rows, cols] = True
+        assert np.array_equal(m, m2)
+
+    def test_rmat_locality_increases_with_a(self):
+        """Larger a pushes work to lower levels (paper Fig 4 right)."""
+        n = 1 << 9
+        tasks = {}
+        for a in (0.25, 0.9):
+            rows, cols = rmat_pairs(9, 5.0, a, seed=5)
+            per = an.count_tasks_per_level_pairs(rows, cols, n)
+            tasks[a] = sum(per.values()) / max(per[9], 1)
+        # high locality -> total/leaf ratio lower (leaf-dominated)
+        assert tasks[0.9] < tasks[0.25]
+
+    def test_block_mask_coarsen(self):
+        mask = np.zeros((16, 16), dtype=bool)
+        mask[3, 5] = True
+        bm = block_mask_from_element_mask(mask, 4)
+        assert bm.shape == (4, 4)
+        assert bm[0, 1] and bm.sum() == 1
+
+
+class TestAnalysis:
+    def test_eq1_matches_simulation(self):
+        """Eq (1) expectation vs empirical count, random pattern."""
+        L, delta = 8, 0.02
+        n = 1 << L
+        counts = []
+        for seed in range(5):
+            rows, cols = np.nonzero(random_mask(n, delta, seed=seed))
+            per = an.count_tasks_per_level_pairs(rows, cols, n)
+            counts.append(per)
+        for l in (4, 6, 8):
+            emp = np.mean([c[l] for c in counts])
+            exp = an.random_tasks_at_level(L, delta, l)
+            assert abs(emp - exp) / max(exp, 1) < 0.25
+
+    def test_eq2_eq3_bounds_hold(self):
+        L, delta = 8, 0.02
+        n = 1 << L
+        rows, cols = np.nonzero(random_mask(n, delta, seed=0))
+        per = an.count_tasks_per_level_pairs(rows, cols, n)
+        for l, c in per.items():
+            assert c <= an.random_bound_low(l) + 1e-9
+            assert c <= an.random_bound_high(L, delta, l) * 1.5 + 1e-9
+
+    def test_eq7_total_bound(self):
+        L, delta = 8, 0.02
+        n = 1 << L
+        rows, cols = np.nonzero(random_mask(n, delta, seed=1))
+        per = an.count_tasks_per_level_pairs(rows, cols, n)
+        assert sum(per.values()) <= an.random_total_bound(n, delta)
+
+    def test_banded_bounds_hold(self):
+        L, k = 8, 3               # d = 2^k = 8
+        n, d = 1 << L, 1 << k
+        rows, cols = banded_pairs(n, d)
+        per = an.count_tasks_per_level_pairs(rows, cols, n)
+        for l, c in per.items():
+            assert c <= an.banded_tasks_bound(L, k, l) + 1e-9
+        assert sum(per.values()) <= an.banded_total_bound(n, d)
+
+    def test_banded_leaf_level_dominates(self):
+        """Fig 3: with locality, work concentrates at the lowest levels."""
+        L, k = 10, 2
+        n, d = 1 << L, 1 << k
+        rows, cols = banded_pairs(n, d)
+        per = an.count_tasks_per_level_pairs(rows, cols, n)
+        assert per[L] > 0.5 * sum(per.values())
+
+    def test_eq16_flops_exact(self):
+        """Eq (16) equals the exact count of banded x banded scalar muls."""
+        n, d = 64, 3
+        a = banded_mask(n, d).astype(float)
+        # count scalar multiplications: sum_k (nnz in col k of A) * (nnz row k of B)
+        exact = 2.0 * int((a.sum(0) * a.sum(1)).sum())
+        assert exact == an.banded_multiply_flops(n, d)
+
+    def test_counts_pairs_equal_quadtree_blocks1(self):
+        """The coordinate-list level counter reproduces the task graph's
+        per-level multiply counts for a blocksize-1 quadtree."""
+        n = 32
+        params = QTParams(n, 1, 1)
+        mask = random_mask(n, 0.1, seed=3)
+        a = values_for_mask(mask, seed=3)
+        g = CTGraph()
+        ra = qt_from_dense(g, a, params)
+        rb = qt_from_dense(g, a, params)
+        qt_multiply(g, params, ra, rb)
+        got = count_tasks_per_level(g)
+        rows, cols = np.nonzero(mask)
+        want = an.count_tasks_per_level_pairs(rows, cols, n)
+        for l, c in got.items():
+            assert want[l] == c
+
+    def test_spsumma_formulas(self):
+        assert an.spsumma_elements_fetched_per_process(5, 1000, 4) == \
+            2 * 5 * 1000 / 2.0
+        assert an.spsumma_weak_scaling_elements(5, 10, 16) == 2 * 5 * 10 * 4.0
+
+    def test_exec_time_models_monotone(self):
+        assert an.exec_time_banded(1 << 12, 8, 16) < \
+            an.exec_time_banded(1 << 12, 8, 4)
+        assert an.exec_time_random(1 << 12, 1e-3, 16) < \
+            an.exec_time_random(1 << 12, 1e-3, 4)

@@ -1,0 +1,204 @@
+"""Quadtree matrix library vs dense numpy (paper §3, Algorithms 1-2)."""
+import numpy as np
+import pytest
+
+from repro.core.tasks import CTGraph
+from repro.core.quadtree import (QTParams, qt_from_coo, qt_from_dense,
+                                 qt_to_dense, qt_stats)
+from repro.core.multiply import (qt_add, qt_multiply, qt_sym_multiply,
+                                 qt_sym_square, qt_syrk,
+                                 count_tasks_per_level, total_add_tasks,
+                                 total_multiply_tasks)
+from repro.core.patterns import (banded_mask, random_mask,
+                                 random_symmetric_mask, values_for_mask)
+
+PARAMS = QTParams(n=64, leaf_n=16, bs=4)
+
+
+def _mk(mask, seed, symmetric=False):
+    return values_for_mask(mask, seed=seed, symmetric=symmetric)
+
+
+def _roundtrip(a, params=PARAMS, upper=False):
+    g = CTGraph()
+    r = qt_from_dense(g, a, params, upper=upper)
+    return qt_to_dense(g, r, params), g, r
+
+
+class TestConstruction:
+    def test_roundtrip_banded(self):
+        a = _mk(banded_mask(64, 5), 0)
+        out, _, _ = _roundtrip(a)
+        np.testing.assert_allclose(out, a)
+
+    def test_roundtrip_random(self):
+        a = _mk(random_mask(64, 0.05, seed=3), 1)
+        out, _, _ = _roundtrip(a)
+        np.testing.assert_allclose(out, a)
+
+    def test_roundtrip_upper_symmetric(self):
+        a = _mk(random_symmetric_mask(64, 0.1, seed=4), 2, symmetric=True)
+        out, _, _ = _roundtrip(a, upper=True)
+        np.testing.assert_allclose(out, a)
+
+    def test_zero_matrix_is_nil(self):
+        g = CTGraph()
+        r = qt_from_dense(g, np.zeros((64, 64)), PARAMS)
+        assert r is None
+
+    def test_nil_subtrees_pruned(self):
+        # only upper-left leaf occupied -> three root children NIL
+        a = np.zeros((64, 64))
+        a[:8, :8] = 1.0
+        _, g, r = _roundtrip(a)
+        root = g.value_of(r)
+        assert root.child(0, 1) is None
+        assert root.child(1, 0) is None
+        assert root.child(1, 1) is None
+
+    def test_from_coo_matches_from_dense(self):
+        mask = banded_mask(64, 3)
+        rows, cols = np.nonzero(mask)
+
+        def vf(r, c):
+            return (r * 64 + c).astype(np.float64) / 1000.0
+
+        g = CTGraph()
+        r1 = qt_from_coo(g, rows, cols, PARAMS, value_fn=vf)
+        dense = np.zeros((64, 64))
+        dense[rows, cols] = vf(rows, cols)
+        out = qt_to_dense(g, r1, PARAMS)
+        np.testing.assert_allclose(out, dense)
+
+    def test_stats(self):
+        a = _mk(banded_mask(64, 5), 0)
+        _, g, r = _roundtrip(a)
+        st = qt_stats(g, r)
+        assert st["depth"] == 2  # 64 -> 32 -> 16 leaves
+        assert st["leaf_chunks"] > 0
+        assert st["nnz_blocks"] > 0
+
+
+class TestMultiply:
+    @pytest.mark.parametrize("ta,tb", [(False, False), (True, False),
+                                       (False, True), (True, True)])
+    def test_multiply_transposes(self, ta, tb):
+        a = _mk(banded_mask(64, 7), 10)
+        b = _mk(random_mask(64, 0.08, seed=5), 11)
+        g = CTGraph()
+        ra = qt_from_dense(g, a, PARAMS)
+        rb = qt_from_dense(g, b, PARAMS)
+        rc = qt_multiply(g, PARAMS, ra, rb, ta=ta, tb=tb)
+        out = qt_to_dense(g, rc, PARAMS)
+        aa = a.T if ta else a
+        bb = b.T if tb else b
+        np.testing.assert_allclose(out, aa @ bb, atol=1e-12)
+
+    def test_multiply_nil_either(self):
+        a = _mk(banded_mask(64, 3), 1)
+        g = CTGraph()
+        ra = qt_from_dense(g, a, PARAMS)
+        assert qt_multiply(g, PARAMS, ra, None) is None
+        assert qt_multiply(g, PARAMS, None, ra) is None
+
+    def test_add(self):
+        a = _mk(banded_mask(64, 4), 1)
+        b = _mk(random_mask(64, 0.05, seed=2), 2)
+        g = CTGraph()
+        ra = qt_from_dense(g, a, PARAMS)
+        rb = qt_from_dense(g, b, PARAMS)
+        rc = qt_add(g, PARAMS, ra, rb)
+        np.testing.assert_allclose(qt_to_dense(g, rc, PARAMS), a + b)
+
+    def test_add_single_nil_aliases(self):
+        a = _mk(banded_mask(64, 4), 1)
+        g = CTGraph()
+        ra = qt_from_dense(g, a, PARAMS)
+        n_before = len(g.nodes)
+        rc = qt_add(g, PARAMS, ra, None)
+        assert rc == ra              # identifier copy, no new chunk
+        assert len(g.nodes) == n_before
+
+    def test_disjoint_product_is_nil(self):
+        # A occupies left half columns, B occupies bottom-left; A*B has
+        # k-range overlap only where A cols meet B rows
+        a = np.zeros((64, 64)); a[:16, 48:] = 1.0
+        b = np.zeros((64, 64)); b[:16, :16] = 1.0
+        g = CTGraph()
+        ra = qt_from_dense(g, a, PARAMS)
+        rb = qt_from_dense(g, b, PARAMS)
+        rc = qt_multiply(g, PARAMS, ra, rb)
+        assert rc is None or np.allclose(qt_to_dense(g, rc, PARAMS), 0)
+
+
+class TestSymmetric:
+    def test_sym_square(self):
+        s = _mk(random_symmetric_mask(64, 0.08, seed=7), 3, symmetric=True)
+        g = CTGraph()
+        rs = qt_from_dense(g, s, PARAMS, upper=True)
+        rc = qt_sym_square(g, PARAMS, rs)
+        np.testing.assert_allclose(qt_to_dense(g, rc, PARAMS), s @ s,
+                                   atol=1e-12)
+
+    @pytest.mark.parametrize("trans", [False, True])
+    def test_syrk(self, trans):
+        a = _mk(banded_mask(64, 6), 8)
+        g = CTGraph()
+        ra = qt_from_dense(g, a, PARAMS)
+        rc = qt_syrk(g, PARAMS, ra, trans=trans)
+        ref = a.T @ a if trans else a @ a.T
+        np.testing.assert_allclose(qt_to_dense(g, rc, PARAMS), ref,
+                                   atol=1e-12)
+
+    @pytest.mark.parametrize("side", ["left", "right"])
+    def test_sym_multiply(self, side):
+        s = _mk(random_symmetric_mask(64, 0.1, seed=9), 4, symmetric=True)
+        b = _mk(banded_mask(64, 5), 5)
+        g = CTGraph()
+        rs = qt_from_dense(g, s, PARAMS, upper=True)
+        rb = qt_from_dense(g, b, PARAMS)
+        rc = qt_sym_multiply(g, PARAMS, rs, rb, side=side)
+        ref = s @ b if side == "left" else b @ s
+        np.testing.assert_allclose(qt_to_dense(g, rc, PARAMS), ref,
+                                   atol=1e-12)
+
+    def test_sym_square_halves_leaf_multiplies(self):
+        """§3.3/Fig 9: symmetric square does ~half the multiply work."""
+        from repro.core.multiply import total_flops
+        s = _mk(banded_mask(64, 15), 6, symmetric=True)
+        s = (s + s.T) / 2
+        g1 = CTGraph()
+        rs = qt_from_dense(g1, s, PARAMS, upper=True)
+        qt_sym_square(g1, PARAMS, rs)
+        f_sym = total_flops(g1)
+        g2 = CTGraph()
+        ra = qt_from_dense(g2, s, PARAMS)
+        rb = qt_from_dense(g2, s, PARAMS)
+        qt_multiply(g2, PARAMS, ra, rb)
+        f_reg = total_flops(g2)
+        assert f_sym < 0.75 * f_reg  # ~0.5 plus diagonal overhead
+
+
+class TestTaskCounts:
+    def test_more_multiplies_than_adds(self):
+        """§5: addition tasks strictly bounded by multiplication tasks."""
+        for seed in range(3):
+            a = _mk(random_mask(64, 0.1, seed=seed), seed)
+            b = _mk(random_mask(64, 0.1, seed=seed + 10), seed + 1)
+            g = CTGraph()
+            ra = qt_from_dense(g, a, PARAMS)
+            rb = qt_from_dense(g, b, PARAMS)
+            qt_multiply(g, PARAMS, ra, rb)
+            assert total_add_tasks(g) < total_multiply_tasks(g)
+
+    def test_per_level_counts(self):
+        a = _mk(banded_mask(64, 3), 0)
+        g = CTGraph()
+        ra = qt_from_dense(g, a, PARAMS)
+        rb = qt_from_dense(g, a, PARAMS)
+        qt_multiply(g, PARAMS, ra, rb)
+        per = count_tasks_per_level(g)
+        assert set(per) <= {0, 1, 2}
+        assert per[0] == 1  # one root multiply
+        # banded: leaf level dominates (locality, Fig 3 right)
+        assert per[2] > per[1] > 0

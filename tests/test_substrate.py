@@ -1,0 +1,235 @@
+"""Optimizer, data pipeline, checkpointing, fault-tolerance runtime."""
+import pathlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.checkpoint import CheckpointManager, load_checkpoint, \
+    save_checkpoint
+from repro.checkpoint.store import latest_step
+from repro.data import SyntheticLM
+from repro.optim import (adamw_init, adamw_update, clip_by_global_norm,
+                         cosine_schedule)
+from repro.runtime import (FaultInjector, HeartbeatMonitor, TrainingRunner,
+                           compressed_grad_tree, dequantize_int8,
+                           elastic_remesh_plan, quantize_int8)
+from repro.runtime.fault import WorkerFailure
+
+
+class TestAdamW:
+    def test_converges_quadratic(self):
+        """AdamW drives a quadratic toward its (decayed) minimum."""
+        target = jnp.asarray([1.0, -2.0, 3.0])
+        params = {"w": jnp.zeros(3)}
+        opt = adamw_init(params)
+
+        @jax.jit
+        def step(params, opt):
+            g = jax.grad(lambda p: jnp.sum((p["w"] - target) ** 2))(params)
+            return adamw_update(params, g, opt, lr=0.05,
+                                weight_decay=0.0)
+
+        for _ in range(300):
+            params, opt = step(params, opt)
+        np.testing.assert_allclose(np.asarray(params["w"]),
+                                   np.asarray(target), atol=1e-2)
+
+    def test_moments_are_f32_for_bf16_params(self):
+        params = {"w": jnp.zeros(4, jnp.bfloat16)}
+        opt = adamw_init(params)
+        assert opt.m["w"].dtype == jnp.float32
+        g = {"w": jnp.ones(4, jnp.bfloat16)}
+        p2, opt2 = adamw_update(params, g, opt, lr=0.1)
+        assert p2["w"].dtype == jnp.bfloat16
+        assert opt2.v["w"].dtype == jnp.float32
+
+    def test_weight_decay_pulls_to_zero(self):
+        params = {"w": jnp.ones(4) * 10}
+        opt = adamw_init(params)
+        g = {"w": jnp.zeros(4)}
+        for _ in range(50):
+            params, opt = adamw_update(params, g, opt, lr=0.1,
+                                       weight_decay=0.5)
+        assert np.abs(np.asarray(params["w"])).max() < 10
+
+    def test_clip_global_norm(self):
+        g = {"a": jnp.ones(4) * 100, "b": jnp.ones(2) * 100}
+        clipped, gn = clip_by_global_norm(g, 1.0)
+        total = np.sqrt(sum((np.asarray(x) ** 2).sum()
+                            for x in jax.tree.leaves(clipped)))
+        np.testing.assert_allclose(total, 1.0, rtol=1e-5)
+        assert float(gn) > 1.0
+
+    def test_cosine_schedule(self):
+        lr0 = cosine_schedule(jnp.int32(0), peak_lr=1.0, warmup=10,
+                              total=100)
+        lr_peak = cosine_schedule(jnp.int32(10), peak_lr=1.0, warmup=10,
+                                  total=100)
+        lr_end = cosine_schedule(jnp.int32(100), peak_lr=1.0, warmup=10,
+                                 total=100)
+        assert float(lr0) == 0.0
+        np.testing.assert_allclose(float(lr_peak), 1.0, atol=0.01)
+        np.testing.assert_allclose(float(lr_end), 0.1, atol=0.01)
+
+
+class TestData:
+    def test_deterministic(self):
+        d = SyntheticLM(vocab=100, seq_len=32, global_batch=4, seed=1)
+        b1 = d.batch_at(7)
+        b2 = d.batch_at(7)
+        assert np.array_equal(b1["tokens"], b2["tokens"])
+
+    def test_targets_are_shifted_inputs(self):
+        d = SyntheticLM(vocab=100, seq_len=32, global_batch=2, seed=1)
+        b = d.batch_at(0)
+        seq = d.sequence(0)
+        assert np.array_equal(b["tokens"][0], seq[:-1])
+        assert np.array_equal(b["targets"][0], seq[1:])
+
+    def test_shards_disjoint_and_union_complete(self):
+        d = SyntheticLM(vocab=100, seq_len=16, global_batch=8, seed=2)
+        full = d.batch_at(3)["tokens"]
+        parts = [d.batch_at(3, shard=i, n_shards=4)["tokens"]
+                 for i in range(4)]
+        assert np.array_equal(np.concatenate(parts), full)
+
+    def test_different_steps_differ(self):
+        d = SyntheticLM(vocab=1000, seq_len=64, global_batch=2, seed=3)
+        assert not np.array_equal(d.batch_at(0)["tokens"],
+                                  d.batch_at(1)["tokens"])
+
+    def test_tokens_in_vocab(self):
+        d = SyntheticLM(vocab=37, seq_len=128, global_batch=2, seed=4)
+        t = d.batch_at(0)["tokens"]
+        assert t.min() >= 0 and t.max() < 37
+
+
+class TestCheckpoint:
+    def _tree(self, seed=0):
+        rng = np.random.default_rng(seed)
+        return {"w": jnp.asarray(rng.standard_normal((4, 4)), jnp.float32),
+                "b": {"x": jnp.asarray(rng.standard_normal(3),
+                                       jnp.bfloat16)}}
+
+    def test_roundtrip(self, tmp_path):
+        tree = self._tree()
+        save_checkpoint(tmp_path, 5, tree)
+        like = jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree)
+        out, step = load_checkpoint(tmp_path, 5, like)
+        assert step == 5
+        for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(out)):
+            np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                          np.asarray(b, np.float32))
+
+    def test_uncommitted_ignored(self, tmp_path):
+        tree = self._tree()
+        save_checkpoint(tmp_path, 1, tree)
+        # fake a partial (uncommitted) later checkpoint
+        (tmp_path / "step_00000002").mkdir()
+        assert latest_step(tmp_path) == 1
+
+    def test_manager_retention_and_restore(self, tmp_path):
+        mgr = CheckpointManager(tmp_path, keep=2)
+        for s in (1, 2, 3, 4):
+            mgr.save(s, self._tree(s), blocking=True)
+        mgr.wait()
+        assert latest_step(tmp_path) == 4
+        steps = sorted(int(p.stem.split("_")[1])
+                       for p in pathlib.Path(tmp_path).glob(
+                           "step_*.COMMITTED"))
+        assert steps == [3, 4]
+        out, step = mgr.restore_latest(self._tree())
+        assert step == 4
+
+    def test_async_save(self, tmp_path):
+        mgr = CheckpointManager(tmp_path, keep=1)
+        mgr.save(7, self._tree(7), blocking=False)
+        mgr.wait()
+        assert latest_step(tmp_path) == 7
+
+
+class TestRuntime:
+    def test_heartbeat_failure_detection(self):
+        mon = HeartbeatMonitor(n_workers=3, timeout=0.0)
+        import time
+        mon.beat(0)
+        time.sleep(0.01)
+        assert 1 in mon.failed_workers()
+        assert 2 in mon.failed_workers()
+
+    def test_straggler_detection(self):
+        mon = HeartbeatMonitor(n_workers=4, straggler_factor=2.0)
+        for w in range(4):
+            for _ in range(5):
+                mon.beat(w, step_time=1.0 if w != 3 else 5.0)
+        assert mon.stragglers() == [3]
+
+    def test_fault_injector(self):
+        inj = FaultInjector({3: 1})
+        inj.check(2)
+        with pytest.raises(WorkerFailure):
+            inj.check(3)
+        inj.check(3)  # consumed
+
+    def test_training_runner_restart_resumes(self, tmp_path):
+        """Counter 'model': state increments per step; failure at step 12
+        restores the step-10 checkpoint and finishes with the exact total."""
+        def step_fn(state, batch):
+            return state + 1, {"loss": float(100 - state)}
+
+        runner = TrainingRunner(
+            step_fn, lambda s: None, CheckpointManager(tmp_path, keep=2),
+            ckpt_every=5, injector=FaultInjector({12: 0}))
+        state, hist = runner.run(jnp.int32(0), 20)
+        assert int(state) == 20
+        assert hist["restarts"] == 1
+
+    def test_training_runner_no_checkpoint_restarts_from_zero(self,
+                                                              tmp_path):
+        def step_fn(state, batch):
+            return state + 1, {"loss": 0.0}
+
+        runner = TrainingRunner(
+            step_fn, lambda s: None, CheckpointManager(tmp_path, keep=2),
+            ckpt_every=100, injector=FaultInjector({3: 0}))
+        state, hist = runner.run(jnp.int32(0), 10)
+        assert int(state) == 10
+        assert hist["restarts"] == 1
+
+    def test_elastic_plan(self):
+        plan = elastic_remesh_plan((16, 16), ("data", "model"), n_failed=5)
+        assert plan.new_shape == (15, 16)
+        assert plan.microbatch_scale == 2
+        with pytest.raises(RuntimeError):
+            elastic_remesh_plan((2, 2), ("data", "model"), n_failed=4)
+
+    def test_compression_error_bound(self):
+        rng = np.random.default_rng(0)
+        g = jnp.asarray(rng.standard_normal(1000), jnp.float32)
+        q, s = quantize_int8(g)
+        back = dequantize_int8(q, s)
+        err = np.abs(np.asarray(back - g)).max()
+        assert err <= float(s) / 2 + 1e-7       # half-ULP of the grid
+        assert q.dtype == jnp.int8
+
+    def test_compressed_tree_shapes_dtypes(self):
+        tree = {"a": jnp.ones((3, 3), jnp.bfloat16),
+                "b": jnp.ones(5, jnp.float32)}
+        out = compressed_grad_tree(tree)
+        assert out["a"].dtype == jnp.bfloat16
+        assert out["b"].shape == (5,)
+
+
+@settings(max_examples=30, deadline=None)
+@given(seed=st.integers(0, 10000), scale=st.floats(1e-3, 1e3))
+def test_property_quantization_relative_error(seed, scale):
+    rng = np.random.default_rng(seed)
+    g = jnp.asarray(rng.standard_normal(256) * scale, jnp.float32)
+    q, s = quantize_int8(g)
+    back = dequantize_int8(q, s)
+    # max error bounded by half a quantization step
+    assert np.abs(np.asarray(back - g)).max() <= float(s) * 0.5 + 1e-6
