@@ -1,9 +1,18 @@
 """Paper Figs 5-8: leaf block-sparse multiply throughput vs fill factor.
 
-Host leaf engine (sum-of-outer-products batching, Fig 2 structure) on
-randomly occupied block matrices, blocksizes 16/32/64, fill sweep.
-CSV: bs,fill,gflops,block_multiplies,batches,useful_fraction.
+Default mode — host leaf engine (sum-of-outer-products batching, Fig 2
+structure) on randomly occupied block matrices, blocksizes 16/32/64, fill
+sweep.  CSV: bs,fill,gflops,block_multiplies,batches,useful_fraction.
+
+``--compare-backends`` — run the same quadtree multiply once per leaf
+backend (numpy reference vs pallas batched waves, both kernel modes) and
+emit one JSON record with per-backend wall time and batched-pair counts:
+
+    PYTHONPATH=src python benchmarks/bench_leaf_multiply.py \
+        --compare-backends [--n 256] [--pattern banded|random]
 """
+import argparse
+import json
 import time
 
 import numpy as np
@@ -11,7 +20,7 @@ import numpy as np
 from repro.core.leaf import LeafMatrix, LeafStats, leaf_multiply
 
 
-def main() -> None:
+def csv_mode() -> None:
     print("bs,fill,gflops,block_multiplies,batches,useful_fraction")
     n = 1024
     rng = np.random.default_rng(0)
@@ -36,6 +45,91 @@ def main() -> None:
                   f"{st.block_multiplies},{st.batches},{useful:.4f}")
             assert not np.isnan(st.flops)
             del c
+
+
+def compare_backends(n: int, pattern: str, leaf_n: int, bs: int,
+                     seed: int) -> dict:
+    """Quadtree multiply through every leaf backend; JSON-able record."""
+    from repro.core.engine import PallasEngine
+    from repro.core.multiply import (qt_multiply, total_flops,
+                                     total_multiply_tasks)
+    from repro.core.patterns import banded_mask, random_mask, values_for_mask
+    from repro.core.quadtree import QTParams, qt_from_dense, qt_to_dense
+    from repro.core.tasks import CTGraph
+
+    if pattern == "banded":
+        mask = banded_mask(n, max(n // 32, 4))
+    else:
+        mask = random_mask(n, 0.08, seed=seed)
+    a = values_for_mask(mask, seed=seed)
+    b = values_for_mask(mask, seed=seed + 1)
+    params = QTParams(n, leaf_n, bs)
+
+    # engine instances bind to one graph, so each timed run gets a fresh one
+    backends = {
+        "numpy": lambda: "numpy",
+        "pallas-pairs": lambda: PallasEngine(kernel="pairs"),
+        "pallas-gemm": lambda: PallasEngine(kernel="gemm"),
+    }
+    record = {
+        "mode": "compare-backends", "n": n, "leaf_n": leaf_n, "bs": bs,
+        "pattern": pattern, "seed": seed, "backends": {},
+    }
+    ref = None
+    for name, mk_engine in backends.items():
+        # run twice: the first pays one-time jit trace/compile (reported as
+        # wall_s_cold), the second is the steady-state comparison number
+        walls = []
+        for _ in range(2):
+            g = CTGraph(engine=mk_engine())
+            ra = qt_from_dense(g, a, params)
+            rb = qt_from_dense(g, b, params)
+            t0 = time.perf_counter()
+            rc = qt_multiply(g, params, ra, rb)
+            g.flush()
+            walls.append(time.perf_counter() - t0)
+        out = qt_to_dense(g, rc, params)
+        if ref is None:
+            ref = out
+        else:
+            np.testing.assert_allclose(out, ref, atol=1e-3, rtol=1e-3)
+        entry = {
+            "wall_s": walls[-1],
+            "wall_s_cold": walls[0],
+            "multiply_tasks": total_multiply_tasks(g),
+            "flops": total_flops(g),
+        }
+        stats = g.engine.stats()
+        if stats:
+            entry.update({
+                "kernel": stats.get("kernel"),
+                "waves": stats.get("waves"),
+                "batched_pairs": stats.get("batched_pairs"),
+                "padded_pairs": stats.get("padded_pairs"),
+                "c_blocks": stats.get("c_blocks"),
+                "kernel_wall_s": stats.get("kernel_wall_s"),
+                "bytes_packed": stats.get("bytes_packed"),
+            })
+        record["backends"][name] = entry
+    return record
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--compare-backends", action="store_true",
+                    help="JSON backend comparison instead of the CSV sweep")
+    ap.add_argument("--n", type=int, default=256)
+    ap.add_argument("--leaf-n", type=int, default=64)
+    ap.add_argument("--bs", type=int, default=16)
+    ap.add_argument("--pattern", choices=("banded", "random"),
+                    default="banded")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    if args.compare_backends:
+        print(json.dumps(compare_backends(args.n, args.pattern, args.leaf_n,
+                                          args.bs, args.seed), indent=2))
+    else:
+        csv_mode()
 
 
 if __name__ == "__main__":

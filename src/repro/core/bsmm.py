@@ -33,10 +33,14 @@ GemmFn = Callable[[jax.Array, jax.Array], jax.Array]
 
 
 def _default_gemm(a: jax.Array, b: jax.Array) -> jax.Array:
-    """(p, bs, bs) x (p, bs, bs) batched GEMM; XLA fallback for the Pallas
-    kernel (kernels/batched_gemm.py) — identical contract."""
-    return jnp.einsum("pik,pkj->pij", a, b,
-                      preferred_element_type=jnp.float32).astype(a.dtype)
+    """(p, bs, bs) x (p, bs, bs) batched GEMM.
+
+    Routed through kernels.ops so the Pallas kernel (with internal block_t
+    padding) runs on TPU while CPU gets the XLA reference — the same
+    backend-dispatch contract as the leaf engine.
+    """
+    from repro.kernels import ops as kops
+    return kops.batched_gemm(a, b)
 
 
 def compute_c_structure(mask_a: jax.Array, mask_b: jax.Array, cap_c: int

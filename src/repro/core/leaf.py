@@ -144,6 +144,33 @@ class LeafMatrix:
 
 
 # ---------------------------------------------------------------------------
+# Block structure allocation / unpacking — the bridge between the
+# dict-of-blocks host format and the packed (P, bs, bs) arrays the batched
+# kernels produce (paper §4.1: leaf data is handed to the accelerator as one
+# batch; the engine gathers operands pair-wise, results come back packed).
+# ---------------------------------------------------------------------------
+
+def unpack_blocks(leaf: LeafMatrix, keys: Iterable[tuple[int, int]],
+                  data: np.ndarray) -> None:
+    """Fill existing blocks *in place* from a packed (P, bs, bs) array.
+
+    In-place assignment (rather than rebinding) is what lets the engine fill
+    placeholder blocks after downstream tasks already hold references.
+    """
+    for key, blk in zip(keys, data):
+        leaf.blocks[key][...] = blk
+
+
+def alloc_structure(n: int, bs: int, keys: Iterable[tuple[int, int]],
+                    upper: bool = False, dtype=np.float64) -> LeafMatrix:
+    """Leaf with the given block structure, all blocks zero-allocated."""
+    out = LeafMatrix(n, bs, upper=upper, dtype=dtype)
+    for key in keys:
+        out.blocks[key] = np.zeros((bs, bs), dtype)
+    return out
+
+
+# ---------------------------------------------------------------------------
 # Batched-GEMM schedule (Fig 2): one batch per inner block index k; all
 # multiplies in a batch are independent (distinct output blocks).
 # ---------------------------------------------------------------------------

@@ -17,14 +17,19 @@ multiplication tasks" (eq. (1) counts both-nonzero products only).
 
 Additions with exactly one NIL operand alias the other chunk id (Alg 2 lines
 15-18: "C = A" is an identifier copy, no new chunk, no work).
+
+Leaf-level tasks carry a batchable :class:`~repro.core.engine.LeafPayload`
+instead of an opaque closure and are dispatched through the graph's leaf
+engine (engine.py): ``CTGraph(engine="numpy")`` executes them immediately
+with the host library, ``CTGraph(engine="pallas")`` defers and batches them
+across the whole quadtree into fused kernel waves (§4.1 batched leaf work).
 """
 from __future__ import annotations
 
 import math
 from typing import Optional
 
-from .leaf import (LeafStats, leaf_add, leaf_multiply, leaf_sym_multiply,
-                   leaf_sym_square, leaf_syrk)
+from .engine import LeafPayload
 from .quadtree import MatrixChunk, QTParams
 from .tasks import Alias, CTGraph, Dep
 
@@ -67,11 +72,8 @@ def qt_add(g: CTGraph, params: QTParams, a: Optional[int], b: Optional[int]
     level = _level_of(params, ac.n)
 
     if ac.is_leaf:
-        def fn(av: MatrixChunk, bv: MatrixChunk):
-            res = leaf_add(av.leaf, bv.leaf)
-            return MatrixChunk(av.n, leaf=res, upper=av.upper)
-
-        nid = g.register_task("add", fn, [Dep(a), Dep(b)])
+        nid = g.register_task("add", None, [Dep(a), Dep(b)],
+                              payload=LeafPayload("add", a=a, b=b))
         g.nodes[nid].level = level
         return nid
 
@@ -96,16 +98,9 @@ def qt_multiply(g: CTGraph, params: QTParams, a: Optional[int],
     level = _level_of(params, ac.n)
 
     if ac.is_leaf:
-        stats = LeafStats()
-
-        def fn(av: MatrixChunk, bv: MatrixChunk):
-            res = leaf_multiply(av.leaf, bv.leaf, ta=ta, tb=tb, stats=stats)
-            if res.is_zero():
-                return None
-            return MatrixChunk(av.n, leaf=res)
-
-        nid = g.register_task("multiply", fn, [Dep(a), Dep(b)])
-        g.nodes[nid].flops = stats.flops
+        nid = g.register_task(
+            "multiply", None, [Dep(a), Dep(b)],
+            payload=LeafPayload("multiply", a=a, b=b, ta=ta, tb=tb))
         g.nodes[nid].level = level
         return nid
 
@@ -139,16 +134,8 @@ def qt_sym_square(g: CTGraph, params: QTParams, a: Optional[int]
     level = _level_of(params, ac.n)
 
     if ac.is_leaf:
-        stats = LeafStats()
-
-        def fn(av: MatrixChunk):
-            res = leaf_sym_square(av.leaf, stats=stats)
-            if res.is_zero():
-                return None
-            return MatrixChunk(av.n, leaf=res, upper=True)
-
-        nid = g.register_task("sym_square", fn, [Dep(a)])
-        g.nodes[nid].flops = stats.flops
+        nid = g.register_task("sym_square", None, [Dep(a)],
+                              payload=LeafPayload("sym_square", a=a))
         g.nodes[nid].level = level
         return nid
 
@@ -181,16 +168,8 @@ def qt_syrk(g: CTGraph, params: QTParams, a: Optional[int],
     level = _level_of(params, ac.n)
 
     if ac.is_leaf:
-        stats = LeafStats()
-
-        def fn(av: MatrixChunk):
-            res = leaf_syrk(av.leaf, trans=trans, stats=stats)
-            if res.is_zero():
-                return None
-            return MatrixChunk(av.n, leaf=res, upper=True)
-
-        nid = g.register_task("syrk", fn, [Dep(a)])
-        g.nodes[nid].flops = stats.flops
+        nid = g.register_task("syrk", None, [Dep(a)],
+                              payload=LeafPayload("syrk", a=a, trans=trans))
         g.nodes[nid].level = level
         return nid
 
@@ -231,16 +210,9 @@ def qt_sym_multiply(g: CTGraph, params: QTParams, s: Optional[int],
     level = _level_of(params, sc.n)
 
     if sc.is_leaf:
-        stats = LeafStats()
-
-        def fn(sv: MatrixChunk, bv: MatrixChunk):
-            res = leaf_sym_multiply(sv.leaf, bv.leaf, side=side, stats=stats)
-            if res.is_zero():
-                return None
-            return MatrixChunk(sv.n, leaf=res)
-
-        nid = g.register_task("sym_multiply", fn, [Dep(s), Dep(b)])
-        g.nodes[nid].flops = stats.flops
+        nid = g.register_task(
+            "sym_multiply", None, [Dep(s), Dep(b)],
+            payload=LeafPayload("sym_multiply", a=s, b=b, side=side))
         g.nodes[nid].level = level
         return nid
 

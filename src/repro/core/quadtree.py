@@ -185,6 +185,8 @@ def qt_to_dense(g: CTGraph, nid: Optional[int], params: QTParams
     (the lower quadrant at each level is the transpose of the stored upper
     one; upper-storage leaves expand to full symmetric leaves).
     """
+    g.flush()   # deferred leaf waves must have filled block data
+
     def read(nid: Optional[int], n: int) -> np.ndarray:
         chunk: Optional[MatrixChunk] = g.value_of(nid)
         if chunk is None:
@@ -229,6 +231,11 @@ def qt_stats(g: CTGraph, nid: Optional[int]) -> dict:
 
 
 def qt_frob2(g: CTGraph, nid: Optional[int]) -> float:
+    g.flush()   # deferred leaf waves must have filled block data
+    return _frob2(g, nid)
+
+
+def _frob2(g: CTGraph, nid: Optional[int]) -> float:
     chunk: Optional[MatrixChunk] = g.value_of(nid)
     if chunk is None:
         return 0.0
@@ -242,7 +249,7 @@ def qt_frob2(g: CTGraph, nid: Optional[int]) -> float:
         return tot
     tot = 0.0
     for idx, c in enumerate(chunk.children):
-        w = qt_frob2(g, c)
+        w = _frob2(g, c)
         if chunk.upper and idx == 1:  # off-diagonal counted twice
             w *= 2
         tot += w

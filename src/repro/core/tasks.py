@@ -64,6 +64,7 @@ class Node:
     cost: float = 0.0               # modelled execution time (seconds)
     flops: float = 0.0              # useful flops (leaf compute)
     level: int = -1                 # quadtree level of the task (-1 = n/a)
+    payload: Any = None             # batchable leaf-op description (engine.py)
 
 
 @dataclasses.dataclass
@@ -77,16 +78,40 @@ class CostModel:
 
 
 class CTGraph:
-    """Phase A: records the task DAG while computing values eagerly."""
+    """Phase A: records the task DAG while computing values eagerly.
 
-    def __init__(self) -> None:
+    Leaf-level matrix work is routed through a pluggable **leaf engine**
+    (engine.py): tasks registered with a ``payload`` carry a batchable
+    description of their work instead of an opaque closure, and the engine
+    decides whether to execute immediately (numpy backend) or defer and
+    batch across the whole graph (pallas backend).  Call :meth:`flush`
+    before reading numeric chunk contents; graph *structure* (NIL-ness,
+    task counts, flops attribution) is always final at registration.
+    """
+
+    def __init__(self, engine: Any = None) -> None:
         self.nodes: list[Node] = []
         self._parent: Optional[int] = None
+        self._engine_spec = engine
+        self._engine: Any = None
+
+    @property
+    def engine(self):
+        """The resolved leaf engine (constructed lazily)."""
+        if self._engine is None:
+            from .engine import make_engine
+            self._engine = make_engine(self._engine_spec)
+        return self._engine
+
+    def flush(self) -> None:
+        """Execute any deferred leaf work (batched waves on the engine)."""
+        if self._engine is not None:
+            self._engine.flush(self)
 
     # -- core API used by the matrix library --------------------------------
-    def register_task(self, kind: str, fn: Callable[..., Any],
+    def register_task(self, kind: str, fn: Optional[Callable[..., Any]],
                       deps: list[Dep], cost: float = 0.0,
-                      flops: float = 0.0) -> int:
+                      flops: float = 0.0, payload: Any = None) -> int:
         """Register & eagerly execute a task; returns its node id.
 
         ``fn`` receives the dep *values* (None for NIL / non-fetch deps get the
@@ -95,18 +120,26 @@ class CTGraph:
         * an ``Alias(nid)`` — result is another node's chunk,
         * None — NIL result.
         ``fn`` may recursively register subtasks; parentage is tracked.
+
+        Alternatively pass ``payload`` (a :class:`~repro.core.engine
+        .LeafPayload`) instead of ``fn``: the task is dispatched through the
+        graph's leaf engine, which may batch it with other leaf tasks.
         """
         nid = len(self.nodes)
         node = Node(nid=nid, kind=kind, parent=self._parent, deps=deps,
-                    cost=cost, flops=flops)
+                    cost=cost, flops=flops, payload=payload)
         self.nodes.append(node)
         if self._parent is not None:
             self.nodes[self._parent].children.append(nid)
         saved = self._parent
         self._parent = nid
         try:
-            vals = [self.value_of(d.nid) if d.fetch else d.nid for d in deps]
-            res = fn(*vals)
+            if payload is not None:
+                res = self.engine.execute(self, node, payload)
+            else:
+                vals = [self.value_of(d.nid) if d.fetch else d.nid
+                        for d in deps]
+                res = fn(*vals)
         finally:
             self._parent = saved
         if isinstance(res, Alias):
@@ -222,6 +255,7 @@ class ClusterSim:
     def run(self, g: CTGraph, roots: list[int] | None = None,
             start_worker: int = 0) -> SimResult:
         """Simulate execution of all not-yet-simulated nodes of ``g``."""
+        g.flush()   # batched leaf waves must run so per-task flops are final
         todo = [n for n in g.nodes if n.nid not in self._owner_of_node]
         if not todo:
             return self._result(0.0, 0)

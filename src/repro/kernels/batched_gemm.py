@@ -33,21 +33,31 @@ def _kernel(a_ref, b_ref, o_ref):
 @functools.partial(jax.jit, static_argnames=("block_t", "interpret"))
 def batched_gemm(a: jax.Array, b: jax.Array, *, block_t: int = 8,
                  interpret: bool = False) -> jax.Array:
-    """C[p] = A[p] @ B[p] for p in [0, P); P must divide by block_t.
+    """C[p] = A[p] @ B[p] for p in [0, P).
 
-    a, b : (P, bs, bs); returns (P, bs, bs) in a's dtype.
+    a, b : (P, bs, bs); returns (P, bs, bs) in a's dtype.  Batches that do
+    not divide by ``block_t`` are zero-padded up to the next multiple (the
+    padding feeds the MXU zero work and is sliced off) — shapes are static
+    under jit, so the pad is resolved at trace time.
     """
     p, bs, _ = a.shape
     assert a.shape == b.shape and a.shape[1] == a.shape[2]
-    assert p % block_t == 0, f"batch {p} not divisible by block_t {block_t}"
-    return pl.pallas_call(
+    if p == 0:
+        return a
+    pad = (-p) % block_t
+    if pad:
+        zeros = jnp.zeros((pad, bs, bs), a.dtype)
+        a = jnp.concatenate([a, zeros])
+        b = jnp.concatenate([b, zeros])
+    out = pl.pallas_call(
         _kernel,
-        grid=(p // block_t,),
+        grid=((p + pad) // block_t,),
         in_specs=[
             pl.BlockSpec((block_t, bs, bs), lambda i: (i, 0, 0)),
             pl.BlockSpec((block_t, bs, bs), lambda i: (i, 0, 0)),
         ],
         out_specs=pl.BlockSpec((block_t, bs, bs), lambda i: (i, 0, 0)),
-        out_shape=jax.ShapeDtypeStruct((p, bs, bs), a.dtype),
+        out_shape=jax.ShapeDtypeStruct((p + pad, bs, bs), a.dtype),
         interpret=interpret,
     )(a, b)
+    return out[:p]

@@ -61,6 +61,8 @@ def bsmm_pairs(a_blocks: jax.Array, b_blocks: jax.Array,
     """
     (p_cnt,) = sa.shape
     bs = a_blocks.shape[1]
+    if p_cnt == 0:     # static under jit: no pairs -> all-zero C
+        return jnp.zeros((cap_c, bs, bs), a_blocks.dtype)
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=3,
         grid=(p_cnt,),

@@ -24,29 +24,36 @@ def _on_tpu() -> bool:
 
 def batched_gemm(a: jax.Array, b: jax.Array, *, block_t: int = 8,
                  use_pallas: Optional[bool] = None,
-                 interpret: bool = False) -> jax.Array:
-    """C[p] = A[p] @ B[p]; (P, bs, bs) each."""
+                 interpret: Optional[bool] = None) -> jax.Array:
+    """C[p] = A[p] @ B[p]; (P, bs, bs) each.
+
+    ``interpret=None`` auto-selects: compiled on TPU, interpret mode on CPU
+    (so ``use_pallas=True`` exercises the kernel body everywhere).  The
+    kernel zero-pads batches to a multiple of ``block_t`` internally.
+    """
     if use_pallas is None:
         use_pallas = _on_tpu()
     if not use_pallas:
         return ref.batched_gemm_ref(a, b)
-    p = a.shape[0]
-    bt = block_t
-    while p % bt:
-        bt //= 2
-    return _batched_gemm_kernel(a, b, block_t=max(bt, 1),
-                                interpret=interpret)
+    if interpret is None:
+        interpret = not _on_tpu()
+    return _batched_gemm_kernel(a, b, block_t=block_t, interpret=interpret)
 
 
 def bsmm_pairs(a_blocks: jax.Array, b_blocks: jax.Array, sa: jax.Array,
                sb: jax.Array, seg: jax.Array, *, cap_c: int,
                use_pallas: Optional[bool] = None,
-               interpret: bool = False) -> jax.Array:
-    """C[seg[p]] += A[sa[p]] @ B[sb[p]]; seg ascending, cap_c = invalid."""
+               interpret: Optional[bool] = None) -> jax.Array:
+    """C[seg[p]] += A[sa[p]] @ B[sb[p]]; seg ascending, cap_c = invalid.
+
+    ``interpret=None`` auto-selects interpret mode off-TPU.
+    """
     if use_pallas is None:
         use_pallas = _on_tpu()
     if not use_pallas:
         return ref.bsmm_pairs_ref(a_blocks, b_blocks, sa, sb, seg, cap_c)
+    if interpret is None:
+        interpret = not _on_tpu()
     sa = jnp.clip(sa, 0, a_blocks.shape[0] - 1)
     sb = jnp.clip(sb, 0, b_blocks.shape[0] - 1)
     out = _bsmm_pairs_kernel(a_blocks, b_blocks, sa, sb, seg,

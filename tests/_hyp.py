@@ -1,0 +1,73 @@
+"""Shared hypothesis shim for the property-based tests.
+
+When ``hypothesis`` is installed the real ``given``/``settings``/strategies
+are re-exported unchanged.  Without it (the optional dep is not part of the
+baked toolchain) a tiny deterministic fallback runs each property test over a
+fixed number of seeded examples, so ``python -m pytest -x -q`` collects and
+runs green either way.
+
+The fallback implements exactly the strategy surface this suite uses:
+``st.integers(lo, hi)``, ``st.floats(lo, hi)``, ``st.sampled_from(seq)``.
+"""
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+    import functools
+    import inspect
+    import random
+
+    # fallback cap: keeps the no-hypothesis tier fast; the CI job with
+    # hypothesis installed runs the full declared max_examples
+    _FALLBACK_MAX_EXAMPLES = 10
+
+    class _Strategy:
+        def __init__(self, draw):
+            self._draw = draw
+
+        def draw(self, rng: random.Random):
+            return self._draw(rng)
+
+    class _Strategies:
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+        @staticmethod
+        def floats(min_value, max_value):
+            return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+        @staticmethod
+        def sampled_from(elements):
+            elements = list(elements)
+            return _Strategy(lambda rng: rng.choice(elements))
+
+    st = _Strategies()
+
+    def settings(max_examples: int = _FALLBACK_MAX_EXAMPLES, **_ignored):
+        def deco(fn):
+            fn._hyp_max_examples = min(max_examples, _FALLBACK_MAX_EXAMPLES)
+            return fn
+        return deco
+
+    def given(**strategies):
+        def deco(fn):
+            @functools.wraps(fn)
+            def wrapper(*args, **kwargs):
+                n = getattr(wrapper, "_hyp_max_examples",
+                            _FALLBACK_MAX_EXAMPLES)
+                # seeded per test so examples are stable across runs
+                rng = random.Random(f"{fn.__module__}.{fn.__qualname__}")
+                for _ in range(n):
+                    drawn = {k: s.draw(rng) for k, s in strategies.items()}
+                    fn(*args, **drawn, **kwargs)
+            # hide the property parameters from pytest's fixture resolution
+            wrapper.__signature__ = inspect.Signature()
+            del wrapper.__wrapped__
+            return wrapper
+        return deco

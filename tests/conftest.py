@@ -1,0 +1,29 @@
+"""Shared pytest config: sys.path for intra-suite imports + slow gating.
+
+Markers (registered in pytest.ini):
+  slow   — long-running tests; deselected unless ``--slow`` is given so the
+           tier-1 command (``python -m pytest -x -q``) stays fast.
+  pallas — exercises the Pallas kernels (interpret mode on CPU, compiled on
+           TPU); select just these with ``-m pallas``.
+"""
+import os
+import sys
+
+import pytest
+
+# make tests/_hyp.py (and friends) importable under any pytest importmode
+sys.path.insert(0, os.path.dirname(__file__))
+
+
+def pytest_addoption(parser):
+    parser.addoption("--slow", action="store_true", default=False,
+                     help="also run tests marked @pytest.mark.slow")
+
+
+def pytest_collection_modifyitems(config, items):
+    if config.getoption("--slow"):
+        return
+    skip_slow = pytest.mark.skip(reason="slow test: pass --slow to run")
+    for item in items:
+        if "slow" in item.keywords:
+            item.add_marker(skip_slow)

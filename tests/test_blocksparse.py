@@ -3,7 +3,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st
 
 from repro.core import blocksparse as bsp
 from repro.core.bsmm import (bsmm, bsmm_from_dense, compute_c_structure,

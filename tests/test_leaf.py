@@ -1,7 +1,7 @@
 """Block-sparse leaf matrix library vs dense numpy (paper §4.1, Fig 2)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st
 
 from repro.core.leaf import (LeafMatrix, LeafStats, leaf_add, leaf_multiply,
                              leaf_scale, leaf_sym_multiply, leaf_sym_square,

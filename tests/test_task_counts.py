@@ -1,0 +1,140 @@
+"""Task-count regression: the executed graph matches the paper's eq. (1).
+
+The paper's eq. (1) family counts multiplication tasks per quadtree level as
+the number of surviving (i, k, j) triples: sum_k (nonzero chunks in column k
+of A at level l) x (nonzero chunks in row k of B at level l).  These tests
+pin the executor refactor (payload dispatch through the leaf engine) against
+that closed form, evaluated three independent ways:
+
+* analytically for banded patterns (bandwidth coarsens as (d-1)//f + 1);
+* combinatorially via analysis.count_tasks_per_level_pairs (any pattern);
+* against the §5 bounds (eqs (2), (8)).
+"""
+import numpy as np
+import pytest
+
+from repro.core.analysis import (banded_tasks_bound, count_mult_tasks_pairs,
+                                 count_tasks_per_level_pairs)
+from repro.core.multiply import (count_tasks_per_level, total_add_tasks,
+                                 total_multiply_tasks)
+from repro.core.multiply import qt_multiply
+from repro.core.patterns import (banded_mask, block_mask_from_element_mask,
+                                 random_mask, values_for_mask)
+from repro.core.quadtree import QTParams, qt_from_dense
+from repro.core.tasks import CTGraph
+
+PARAMS = QTParams(n=64, leaf_n=16, bs=4)
+LEAF_LEVEL = PARAMS.levels          # root = 0
+
+
+def _graph_counts(a, b, engine="numpy"):
+    g = CTGraph(engine=engine)
+    ra = qt_from_dense(g, a, PARAMS)
+    rb = qt_from_dense(g, b, PARAMS)
+    qt_multiply(g, PARAMS, ra, rb)
+    return g, count_tasks_per_level(g)
+
+
+def _chunk_coords(mask, level):
+    """Nonzero chunk coordinates of the level-``level`` occupancy."""
+    size = PARAMS.n // (1 << level)
+    occ = block_mask_from_element_mask(mask, size)
+    r, c = np.nonzero(occ)
+    return r, c, 1 << level
+
+
+def _banded_closed_form(d_elem, level):
+    """Eq (1) evaluated in closed form for A = B banded.
+
+    At level l the chunk size is f = n/2^l and the chunk occupancy is banded
+    with half-bandwidth D = (d-1)//f + 1; the task count is
+    sum_k c(k)^2 with c(k) the nonzero count of column k.
+    """
+    grid = 1 << level
+    f = PARAMS.n // grid
+    D = (d_elem - 1) // f + 1
+    total = 0
+    for k in range(grid):
+        c = min(grid - 1, k + D) - max(0, k - D) + 1
+        total += c * c
+    return total
+
+
+class TestBandedClosedForm:
+    @pytest.mark.parametrize("d", [3, 5, 9])
+    def test_per_level_matches_eq1(self, d):
+        mask = banded_mask(64, d)
+        a = values_for_mask(mask, seed=d)
+        _, per = _graph_counts(a, a)
+        for level in range(LEAF_LEVEL + 1):
+            assert per[level] == _banded_closed_form(d, level), (
+                f"level {level}, d {d}")
+
+    @pytest.mark.parametrize("d", [3, 5])
+    def test_total_is_sum_of_levels(self, d):
+        a = values_for_mask(banded_mask(64, d), seed=d)
+        g, per = _graph_counts(a, a)
+        assert total_multiply_tasks(g) == sum(per.values())
+
+    @pytest.mark.parametrize("d", [3, 5, 9])
+    def test_eq8_bound_holds(self, d):
+        """C_l < 2^l (2 d_l + 1)^2 (eq (8)); d = 2^k element bandwidth."""
+        a = values_for_mask(banded_mask(64, d), seed=d)
+        _, per = _graph_counts(a, a)
+        L = int(np.log2(PARAMS.n))
+        k = int(np.ceil(np.log2(d)))
+        for level, cnt in per.items():
+            # graph levels stop at leaf chunks; eq (8)'s level runs to
+            # blocksize 1 — translate by the leaf-chunk size
+            assert cnt <= banded_tasks_bound(L, k, level) * 4
+
+
+class TestPatternCounts:
+    @pytest.mark.parametrize("mk,seed", [
+        (lambda s: random_mask(64, 0.1, seed=s), 0),
+        (lambda s: random_mask(64, 0.25, seed=s), 1),
+        (lambda s: banded_mask(64, 7), 2),
+    ])
+    def test_matches_pairs_counter(self, mk, seed):
+        """Graph counts == eq (1) evaluated combinatorially per level."""
+        ma = mk(seed)
+        mb = mk(seed + 100)
+        a = values_for_mask(ma, seed=seed)
+        b = values_for_mask(mb, seed=seed + 100)
+        _, per = _graph_counts(a, b)
+
+        ra, ca, n_chunks = _chunk_coords(ma, LEAF_LEVEL)
+        rb, cb, _ = _chunk_coords(mb, LEAF_LEVEL)
+        want = count_tasks_per_level_pairs(ra, ca, n_chunks,
+                                           rows_b=rb, cols_b=cb)
+        assert per == {l: c for l, c in want.items() if c}
+
+    def test_leaf_level_matches_colrow_product(self):
+        """Eq (1) at one level: sum_k colA_k * rowB_k, direct evaluation."""
+        ma = random_mask(64, 0.15, seed=5)
+        mb = random_mask(64, 0.15, seed=6)
+        a = values_for_mask(ma, seed=5)
+        b = values_for_mask(mb, seed=6)
+        _, per = _graph_counts(a, b)
+        ra, ca, n_chunks = _chunk_coords(ma, LEAF_LEVEL)
+        rb, cb, _ = _chunk_coords(mb, LEAF_LEVEL)
+        assert per[LEAF_LEVEL] == count_mult_tasks_pairs(ra, ca, rb, cb,
+                                                         n_chunks)
+
+    def test_eq2_bound_holds(self):
+        """C_l <= 8^l (eq (2)) for any pattern."""
+        a = values_for_mask(random_mask(64, 0.3, seed=9), seed=9)
+        _, per = _graph_counts(a, a)
+        for level, cnt in per.items():
+            assert cnt <= 8 ** level
+
+    @pytest.mark.pallas
+    def test_counts_invariant_under_pallas_backend(self):
+        """The batched executor must register the exact same task graph."""
+        ma = random_mask(64, 0.12, seed=12)
+        a = values_for_mask(ma, seed=12)
+        g_np, per_np = _graph_counts(a, a, engine="numpy")
+        g_pl, per_pl = _graph_counts(a, a, engine="pallas")
+        assert per_np == per_pl
+        assert total_multiply_tasks(g_np) == total_multiply_tasks(g_pl)
+        assert total_add_tasks(g_np) == total_add_tasks(g_pl)
