@@ -3,31 +3,55 @@
 Subprocess isolation lets each benchmark own its jax/XLA configuration
 (bench_tpu_comm needs virtual devices; the others want the default
 single-device CPU) and makes one failure non-fatal to the rest.
+
+``--quick`` runs only the runtime-simulator communication sweep at reduced
+size and writes ``BENCH_comm_scaling.json`` at the repo root — the perf
+trajectory artifact CI tracks.  The full run refreshes the same file from
+the full-size sweep.
 """
+import argparse
 import pathlib
 import subprocess
 import sys
 import time
 
 BENCHES = [
-    ("bench_task_counts", "Figs 3-4: task counts per level vs bounds"),
-    ("bench_comm_scaling", "Table 1/Figs 12-13: weak-scaling comm/process"),
-    ("bench_batched_gemm", "Table 2: batched GEMM throughput vs blocksize"),
-    ("bench_leaf_multiply", "Figs 5-8: leaf multiply vs fill factor"),
-    ("bench_weak_scaling", "Fig 9: weak scaling + symmetric-square speedup"),
-    ("bench_s2_overlap", "Figs 10-11: S^2 on 3-D overlap matrices"),
-    ("bench_tpu_comm", "Fig 14: HLO collective bytes, halo vs SpSUMMA"),
+    ("bench_task_counts", [],
+     "Figs 3-4: task counts per level vs bounds"),
+    ("bench_comm_scaling", ["--out", "BENCH_comm_scaling.json"],
+     "Table 1/Figs 12-13: weak-scaling comm/process"),
+    ("bench_batched_gemm", [],
+     "Table 2: batched GEMM throughput vs blocksize"),
+    ("bench_leaf_multiply", [],
+     "Figs 5-8: leaf multiply vs fill factor"),
+    ("bench_weak_scaling", [],
+     "Fig 9: weak scaling + symmetric-square speedup"),
+    ("bench_s2_overlap", [],
+     "Figs 10-11: S^2 on 3-D overlap matrices"),
+    ("bench_tpu_comm", [],
+     "Fig 14: HLO collective bytes, halo vs SpSUMMA"),
+]
+
+QUICK = [
+    ("bench_comm_scaling", ["--quick", "--out", "BENCH_comm_scaling.json"],
+     "quick runtime-simulator comm sweep (perf trajectory)"),
 ]
 
 
 def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true",
+                    help="only the reduced simulator sweep (CI-sized)")
+    args = ap.parse_args()
+
     root = pathlib.Path(__file__).parents[1]
+    benches = QUICK if args.quick else BENCHES
     failures = []
-    for name, desc in BENCHES:
+    for name, extra, desc in benches:
         print(f"\n=== {name} — {desc} ===", flush=True)
         t0 = time.time()
         res = subprocess.run(
-            [sys.executable, "-m", f"benchmarks.{name}"],
+            [sys.executable, "-m", f"benchmarks.{name}", *extra],
             cwd=root, text=True, timeout=3600)
         dt = time.time() - t0
         status = "ok" if res.returncode == 0 else "FAILED"

@@ -117,6 +117,82 @@ def spsumma_weak_scaling_elements(m: float, k: float, p: int) -> float:
 # Exact counters from coordinate lists (drive Figs 3-4 at paper scale)
 # ---------------------------------------------------------------------------
 
+# ---------------------------------------------------------------------------
+# Per-worker communication / critical-path summaries of simulator runs
+# (consumed by benchmarks/bench_comm_scaling.py, bench_weak_scaling.py and
+# tests/test_scheduler.py; see repro.runtime.scheduler)
+# ---------------------------------------------------------------------------
+
+def comm_summary(bytes_received: list[int] | np.ndarray) -> dict:
+    """Per-worker communication summary (the quantities of Figs 11-13).
+
+    ``imbalance`` is max/avg — 1.0 means perfectly even reception; the
+    paper's locality argument is about the *max* (the straggler's bytes).
+    """
+    b = np.asarray(bytes_received, dtype=np.float64)
+    avg = float(b.mean())
+    return {
+        "n_workers": int(b.size),
+        "total_bytes": float(b.sum()),
+        "avg_bytes": avg,
+        "max_bytes": float(b.max()),
+        "min_bytes": float(b.min()),
+        "imbalance": float(b.max() / avg) if avg > 0 else 1.0,
+    }
+
+
+def growth_ratios(values: list[float]) -> list[float]:
+    """Successive ratios v[i+1]/v[i] of a scaling series (0-safe)."""
+    out = []
+    for lo, hi in zip(values, values[1:]):
+        out.append(float(hi) / float(lo) if lo > 0 else float("inf"))
+    return out
+
+
+def weak_scaling_growth(series: dict[int, float]) -> float:
+    """Last/first of a {p: metric} weak-scaling series.
+
+    ~1 means the per-worker metric is flat (the paper's O(1) claim for
+    local patterns under locality-aware placement, Table 1); compare with
+    ``sqrt(p_last / p_first)`` for the SpSUMMA rate of eq (17).
+    """
+    ps = sorted(series)
+    first = series[ps[0]]
+    return series[ps[-1]] / first if first > 0 else float("inf")
+
+
+def brent_bound(work_s: float, critical_path_s: float, p: int) -> float:
+    """Greedy-scheduling makespan lower bound max(T1/p, Tinf) (§5.3)."""
+    return max(work_s / p, critical_path_s)
+
+
+def parallel_efficiency(work_s: float, makespan_s: float, p: int) -> float:
+    """T1 / (p * makespan): fraction of worker-time spent on useful work."""
+    return work_s / (p * makespan_s) if makespan_s > 0 else 0.0
+
+
+def avg_parallelism(work_s: float, critical_path_s: float) -> float:
+    """T1 / Tinf: how many workers the DAG can keep busy on average."""
+    return work_s / critical_path_s if critical_path_s > 0 else 0.0
+
+
+def critical_path_summary(work_s: float, critical_path_s: float,
+                          p: int, makespan_s: float) -> dict:
+    """Eq (13)/(14)-style decomposition of one simulated phase."""
+    return {
+        "work_s": work_s,
+        "critical_path_s": critical_path_s,
+        "avg_parallelism": avg_parallelism(work_s, critical_path_s),
+        "brent_bound_s": brent_bound(work_s, critical_path_s, p),
+        "makespan_s": makespan_s,
+        "parallel_efficiency": parallel_efficiency(work_s, makespan_s, p),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Exact counters from coordinate lists (Figs 3-4 at paper scale), continued
+# ---------------------------------------------------------------------------
+
 def count_mult_tasks_pairs(rows_a: np.ndarray, cols_a: np.ndarray,
                            rows_b: np.ndarray, cols_b: np.ndarray,
                            n: int) -> int:

@@ -46,6 +46,7 @@ class Chunk:
 class WorkerStats:
     bytes_received: int = 0           # data fetched from other workers
     bytes_received_local: int = 0     # same-worker fetches (no comm)
+    bytes_pushed: int = 0             # subset of bytes_received: placement pushes
     messages_received: int = 0        # number of remote fetches (latency proxy)
     cache_hits: int = 0
     owned_bytes: int = 0
@@ -87,6 +88,27 @@ class ChunkStore:
         st.peak_owned_bytes = max(st.peak_owned_bytes, st.owned_bytes)
         return ChunkId(worker, local)
 
+    def register_pushed(self, creator: int, owner: int, obj: Any,
+                        nbytes: int | None = None) -> ChunkId:
+        """Register a chunk created by ``creator`` but placed on ``owner``.
+
+        Models a locality-oblivious placement policy: when the runtime
+        assigns ownership away from the creating worker, the data must be
+        *sent* there — the owner receives ``nbytes`` over the network.  The
+        creator keeps a cached copy (it just produced the data), so its own
+        subsequent fetches hit the cache.
+        """
+        if nbytes is None:
+            nbytes = obj.nbytes() if isinstance(obj, Chunk) else _default_nbytes(obj)
+        cid = self.register(owner, obj, nbytes)
+        if owner != creator:
+            st = self.stats[owner]
+            st.bytes_received += nbytes
+            st.bytes_pushed += nbytes
+            st.messages_received += 1
+            self._cache_insert(creator, (owner, cid.local), nbytes)
+        return cid
+
     # -- fetch --------------------------------------------------------------
     def fetch(self, worker: int, cid: Optional[ChunkId]) -> Any:
         """Fetch chunk for use by ``worker``; accounts communication.
@@ -111,12 +133,21 @@ class ChunkStore:
         # remote fetch: communication happens
         st.bytes_received += size
         st.messages_received += 1
+        self._cache_insert(worker, key, size)
+        return obj
+
+    def _cache_insert(self, worker: int, key: tuple[int, int], size: int
+                      ) -> None:
+        cache = self._cache[worker]
         cache[key] = size
         self._cache_used[worker] += size
         while self._cache_used[worker] > self.cache_bytes and cache:
             _, evicted = cache.popitem(last=False)
             self._cache_used[worker] -= evicted
-        return obj
+
+    def cache_used(self, worker: int) -> int:
+        """Bytes currently held in ``worker``'s chunk cache."""
+        return self._cache_used[worker]
 
     def size_of(self, cid: Optional[ChunkId]) -> int:
         if cid is None:
@@ -124,12 +155,23 @@ class ChunkStore:
         return self._sizes[cid.owner][cid.local]
 
     def free(self, cid: Optional[ChunkId]) -> None:
-        """Model chunk deletion (temporaries freed by the library user)."""
+        """Model chunk deletion (temporaries freed by the library user).
+
+        Cached copies on other workers are invalidated too: a freed id's
+        ``(owner, local)`` slot may be reused by a later registration, and a
+        stale cache entry would both pin ``_cache_used`` forever and serve
+        the *old* bytes for the new id.
+        """
         if cid is None:
             return
         size = self._sizes[cid.owner].pop(cid.local)
         del self._data[cid.owner][cid.local]
         self.stats[cid.owner].owned_bytes -= size
+        key = (cid.owner, cid.local)
+        for w in range(self.n_workers):
+            if key in self._cache[w]:
+                del self._cache[w][key]
+                self._cache_used[w] -= size
 
     # -- aggregate stats ----------------------------------------------------
     def total_bytes_received(self) -> int:

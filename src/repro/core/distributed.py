@@ -44,20 +44,34 @@ from .blocksparse import _np_pyramid, enumerate_pairs_hier, mask_pyramid
 # Host-side planning: ownership, capacities, halo distance
 # ---------------------------------------------------------------------------
 
+def _balanced_owner(lin: np.ndarray, cells: int, n_dev: int) -> np.ndarray:
+    """Linear cell index -> device id; balanced contiguous split.
+
+    Device ``d`` owns cells ``[d*cells//n_dev, (d+1)*cells//n_dev)`` — sizes
+    differ by at most one, every id is ``< n_dev``, and when ``n_dev``
+    divides ``cells`` this reduces to the classic ``lin // per``.  Handles
+    ``cells % n_dev != 0`` (the old ``lin // per`` emitted ids >= n_dev)
+    and ``n_dev > cells`` (the old code divided by zero).
+    """
+    # closed form of the split: owner(z) = d iff
+    # d*cells//n_dev <= z < (d+1)*cells//n_dev.  The traced _owned_mask
+    # uses the same expression — keep them in lockstep.
+    return (((lin.astype(np.int64) + 1) * n_dev - 1) // cells
+            ).astype(np.int32)
+
+
 def morton_owner(grid: int, n_dev: int) -> np.ndarray:
     """(grid, grid) -> device id; contiguous Morton ranges."""
     rows = np.repeat(np.arange(grid), grid)
     cols = np.tile(np.arange(grid), grid)
     z = morton.encode(rows, cols).astype(np.int64)
-    per = (grid * grid) // n_dev
-    return (z // per).reshape(grid, grid).astype(np.int32)
+    return _balanced_owner(z, grid * grid, n_dev).reshape(grid, grid)
 
 
 def rowmajor_owner(grid: int, n_dev: int) -> np.ndarray:
     """Non-locality-aware baseline ownership: row-major block ranges."""
-    lin = np.arange(grid * grid).reshape(grid, grid)
-    per = (grid * grid) // n_dev
-    return (lin // per).astype(np.int32)
+    lin = np.arange(grid * grid, dtype=np.int64).reshape(grid, grid)
+    return _balanced_owner(lin, grid * grid, n_dev)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -131,7 +145,7 @@ def plan_distribution(mask_a: np.ndarray, mask_b: np.ndarray, bs: int,
     # via a difference array.
     levels = int(np.log2(grid))
     pyr_a, pyr_b = _np_pyramid(ma), _np_pyramid(mb)
-    per_dev_cells = (grid * grid) // n_dev
+    cells = grid * grid
     pair_caps = []
     for l in range(1, levels + 1):
         a_l = pyr_a[levels - l].astype(np.float64)
@@ -142,8 +156,10 @@ def plan_distribution(mask_a: np.ndarray, mask_b: np.ndarray, bs: int,
         ci, cj = np.nonzero(prod > 0)
         vals = prod[ci, cj]
         z = morton.encode(ci, cj).astype(np.int64)
-        lo = (z * factor * factor) // per_dev_cells
-        hi = ((z + 1) * factor * factor - 1) // per_dev_cells
+        # owners of the coarse cell's first/last fine Morton cell under the
+        # balanced clipped split (consistent with morton_owner/_owned_mask)
+        lo = ((z * factor * factor + 1) * n_dev - 1) // cells
+        hi = (((z + 1) * factor * factor) * n_dev - 1) // cells
         diff = np.zeros(n_dev + 1, np.float64)
         np.add.at(diff, lo, vals)
         np.add.at(diff, np.minimum(hi + 1, n_dev), -vals)
@@ -216,12 +232,19 @@ def _slot_map(rows: jax.Array, cols: jax.Array, grid: int) -> jax.Array:
 
 
 def _owned_mask(grid: int, n_dev: int, dev: jax.Array) -> jax.Array:
-    """(grid, grid) bool: cells in this device's Morton range (traceable)."""
+    """(grid, grid) bool: cells in this device's Morton range (traceable).
+
+    Uses the closed form of the balanced clipped split — owner(z) =
+    ((z+1)*n_dev - 1) // cells assigns z to device d iff
+    d*cells//n_dev <= z < (d+1)*cells//n_dev — so it agrees with
+    :func:`morton_owner` for every n_dev, divisible or not.
+    """
     r = jax.lax.broadcasted_iota(jnp.int32, (grid, grid), 0)
     c = jax.lax.broadcasted_iota(jnp.int32, (grid, grid), 1)
     z = morton.jnp_encode(r, c).astype(jnp.int32)
-    per = (grid * grid) // n_dev
-    return (z // per) == dev
+    # int32 is safe while grid*grid*n_dev < 2^31 (true for any real mesh)
+    owner = ((z + 1) * n_dev - 1) // (grid * grid)
+    return owner == dev
 
 
 def halo_spmm(mesh: Mesh, axis: str, plan: DistPlan,

@@ -12,8 +12,9 @@ ids only — no data transfer), the produced chunk's size, and a cost model of
 the task's work.  Values are computed eagerly so correctness is testable
 against dense numpy.
 
-**Phase B — cluster simulation** (:class:`ClusterSim`): a virtual-time
-discrete-event simulation of CHT-MPI's scheduling on ``p`` workers:
+**Phase B — cluster simulation** (:mod:`repro.runtime.scheduler`, fronted
+here by :class:`ClusterSim`): a virtual-time discrete-event simulation of
+CHT-MPI's scheduling on ``p`` workers:
 
 * each worker owns the tasks registered by tasks it executed (no master);
 * idle workers **steal from a random victim, from the oldest end** of the
@@ -201,31 +202,20 @@ def _nbytes(obj: Any) -> int:
 
 
 # ---------------------------------------------------------------------------
-# Phase B: work-stealing cluster simulation
+# Phase B: work-stealing cluster simulation — lives in runtime/scheduler.py.
+# ClusterSim is kept as the historical front door: a thin wrapper over
+# repro.runtime.scheduler.Scheduler pinned to the paper's locality-aware
+# "parent-worker" chunk placement.
 # ---------------------------------------------------------------------------
-
-@dataclasses.dataclass
-class SimResult:
-    makespan: float
-    bytes_received: list[int]
-    messages_received: list[int]
-    peak_owned: list[int]
-    tasks_per_worker: list[int]
-    busy_time: list[float]
-    steals: int
-
-    @property
-    def avg_bytes_received(self) -> float:
-        return sum(self.bytes_received) / len(self.bytes_received)
-
-    @property
-    def active_fraction(self) -> list[float]:
-        return [b / self.makespan if self.makespan > 0 else 0.0
-                for b in self.busy_time]
-
 
 class ClusterSim:
     """Discrete-event work-stealing simulation of a CHT-MPI cluster.
+
+    Thin compatibility wrapper over
+    :class:`repro.runtime.scheduler.Scheduler` with the paper's
+    ``parent-worker`` placement (chunk ownership follows execution).  Use
+    the Scheduler directly for pluggable placement policies, execution
+    traces, and critical-path statistics.
 
     Persistent across phases: chunk placements from a previous ``run`` (e.g.
     the task program that *built* the input matrices, cf. paper §7 "the data
@@ -235,170 +225,52 @@ class ClusterSim:
     """
 
     def __init__(self, n_workers: int, cache_bytes: int = 1 << 62,
-                 cost: CostModel | None = None, seed: int = 0):
+                 cost: CostModel | None = None, seed: int = 0,
+                 placement: str = "parent-worker"):
+        from repro.runtime.scheduler import Scheduler  # lazy: no cycle
         self.p = n_workers
-        self.store = ChunkStore(n_workers, cache_bytes)
-        self.cost = cost or CostModel()
-        self.rng = random.Random(seed)
-        self.placement: dict[int, ChunkId] = {}  # node id -> chunk id
-        self._owner_of_node: dict[int, int] = {}
+        self._sched = Scheduler(cost=cost, cache_bytes=cache_bytes,
+                                seed=seed)
+        self._placement_policy = placement
+
+    @property
+    def cost(self) -> CostModel:
+        return self._sched.cost
+
+    @property
+    def rng(self) -> random.Random:
+        return self._sched.rng
+
+    @property
+    def store(self) -> ChunkStore:
+        if self._sched.store is None:
+            self._sched._configure(self.p, self._placement_policy)
+        return self._sched.store
+
+    @property
+    def placement(self) -> dict[int, ChunkId]:
+        return self._sched.placement
+
+    @property
+    def _owner_of_node(self) -> dict[int, int]:
+        return self._sched._owner_of_node
 
     def reset_stats(self) -> None:
-        for s in self.store.stats:
-            s.bytes_received = 0
-            s.bytes_received_local = 0
-            s.messages_received = 0
-            s.cache_hits = 0
-            s.tasks_executed = 0
-            s.busy_time = 0.0
+        self.store  # ensure configured
+        self._sched.reset_stats()
 
     def run(self, g: CTGraph, roots: list[int] | None = None,
-            start_worker: int = 0) -> SimResult:
+            start_worker: int = 0) -> "SimResult":
         """Simulate execution of all not-yet-simulated nodes of ``g``."""
-        g.flush()   # batched leaf waves must run so per-task flops are final
-        todo = [n for n in g.nodes if n.nid not in self._owner_of_node]
-        if not todo:
-            return self._result(0.0, 0)
-        todo_ids = {n.nid for n in todo}
+        return self._sched.run(g, n_workers=self.p,
+                               placement=self._placement_policy,
+                               start_worker=start_worker)
 
-        pending: dict[int, int] = {}      # nid -> unmet dep count
-        dependents: dict[int, list[int]] = {}
-        registered: dict[int, bool] = {}
-        done: set[int] = set(self._owner_of_node)
 
-        for n in todo:
-            cnt = 0
-            for d in n.deps:
-                dn = g.resolve(d.nid)
-                if dn is not None and dn in todo_ids and dn not in done:
-                    cnt += 1
-                    dependents.setdefault(dn, []).append(n.nid)
-            # alias target must complete before the alias is "done" for
-            # scheduling purposes? No: alias resolution is metadata only.
-            pending[n.nid] = cnt
-            registered[n.nid] = (n.parent is None or n.parent not in todo_ids)
-
-        deques: list[list[int]] = [[] for _ in range(self.p)]
-        free_at = [0.0] * self.p
-        n_steals = 0
-
-        def push_ready(nid: int, worker: int) -> None:
-            self._owner_of_node[nid] = worker
-            deques[worker].append(nid)
-
-        # roots (registered, deps met) start on start_worker
-        for n in todo:
-            if registered[n.nid] and pending[n.nid] == 0:
-                push_ready(n.nid, start_worker)
-
-        # virtual time: run worker with earliest free time that has work;
-        # idle workers steal.
-        time_now = 0.0
-        import heapq
-        heap = [(0.0, w) for w in range(self.p)]
-        heapq.heapify(heap)
-        executed = 0
-        total = len(todo)
-        blocked: list[tuple[float, int]] = []  # workers waiting for work
-
-        while executed < total:
-            if not heap:
-                # all workers blocked; advance time to next completion —
-                # but completions are processed inline, so if heap is empty
-                # and work remains, tasks must be waiting on deps: re-arm
-                # blocked workers at the current time.
-                if not blocked:
-                    raise RuntimeError("deadlock in task graph simulation")
-                t = min(b[0] for b in blocked)
-                for bt, w in blocked:
-                    heapq.heappush(heap, (max(bt, t), w))
-                blocked = []
-                continue
-            t, w = heapq.heappop(heap)
-            time_now = max(time_now, t)
-            nid = None
-            if deques[w]:
-                nid = deques[w].pop()          # own work: newest first (LIFO)
-            else:
-                victims = [v for v in range(self.p) if deques[v]]
-                if victims:
-                    v = self.rng.choice(victims)
-                    nid = deques[v].pop(0)     # steal oldest = highest in tree
-                    self._owner_of_node[nid] = w
-                    t += self.cost.steal_latency_s
-                    n_steals += 1
-            if nid is None:
-                blocked.append((t, w))
-                continue
-
-            node = g.nodes[nid]
-            # fetch inputs
-            fetch_time = 0.0
-            for d in node.deps:
-                if not d.fetch:
-                    continue
-                dn = g.resolve(d.nid)
-                cid = self.placement.get(dn) if dn is not None else None
-                if cid is not None:
-                    before = self.store.stats[w].bytes_received
-                    msgs_before = self.store.stats[w].messages_received
-                    self.store.fetch(w, cid)
-                    dbytes = self.store.stats[w].bytes_received - before
-                    dmsgs = self.store.stats[w].messages_received - msgs_before
-                    fetch_time += dbytes / self.cost.bandwidth_Bps \
-                        + dmsgs * self.cost.latency_s
-            dur = (self.cost.task_overhead_s + node.cost
-                   + node.flops / self.cost.flops_per_s + fetch_time)
-            t_end = t + dur
-            st = self.store.stats[w]
-            st.tasks_executed += 1
-            st.busy_time += dur
-
-            # produce output chunk
-            if node.alias_of is None and node.value is not None:
-                cid = self.store.register(w, node.value, node.out_nbytes)
-                self.placement[nid] = cid
-            elif node.alias_of is not None:
-                rn = g.resolve(nid)
-                if rn in self.placement:
-                    self.placement[nid] = self.placement[rn]
-
-            done.add(nid)
-            executed += 1
-            # children become registered
-            for c in node.children:
-                if c in registered and not registered[c]:
-                    registered[c] = True
-                    if pending[c] == 0:
-                        push_ready(c, w)
-            # dependents
-            for dep_nid in dependents.get(nid, ()):  # noqa: B007
-                pending[dep_nid] -= 1
-                if pending[dep_nid] == 0 and registered[dep_nid]:
-                    push_ready(dep_nid, self._owner_of_node.get(
-                        g.nodes[dep_nid].parent, w)
-                        if g.nodes[dep_nid].parent is not None else w)
-            # aliases of nid that already executed get placements lazily via
-            # resolve(); nothing to do here.
-            free_at[w] = t_end
-            heapq.heappush(heap, (t_end, w))
-            # wake blocked workers — there may be new work
-            if blocked:
-                for bt, bw in blocked:
-                    heapq.heappush(heap, (max(bt, time_now), bw))
-                blocked = []
-
-        makespan = max(free_at)
-        return self._result(makespan, n_steals)
-
-    def _result(self, makespan: float, steals: int) -> SimResult:
-        st = self.store.stats
-        return SimResult(
-            makespan=makespan,
-            bytes_received=[s.bytes_received for s in st],
-            messages_received=[s.messages_received for s in st],
-            peak_owned=[s.peak_owned_bytes for s in st],
-            tasks_per_worker=[s.tasks_executed for s in st],
-            busy_time=[s.busy_time for s in st],
-            steals=steals,
-        )
+def __getattr__(name: str):
+    # SimResult now lives in the runtime subsystem (as SimReport); keep the
+    # old name importable from here.
+    if name in ("SimResult", "SimReport"):
+        from repro.runtime.scheduler import SimReport
+        return SimReport
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

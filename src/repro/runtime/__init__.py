@@ -1,4 +1,45 @@
-from .compression import (compressed_grad_tree, dequantize_int8,  # noqa
-                           quantize_int8)
-from .fault import FaultInjector, HeartbeatMonitor, TrainingRunner  # noqa
-from .elastic import elastic_remesh_plan, reshard_tree  # noqa: F401
+"""Runtime subsystems: cluster simulator, fault handling, elasticity.
+
+Submodules are imported lazily (PEP 562): the Chunks-and-Tasks scheduler
+(`scheduler`, `trace`) is pure numpy/stdlib and must stay importable — and
+fast to import — without touching the jax-backed modules (`compression`,
+`fault`, `elastic`).
+"""
+_EXPORTS = {
+    # discrete-event Chunks-and-Tasks runtime simulator (DESIGN.md §4)
+    "Scheduler": ("scheduler", "Scheduler"),
+    "SimReport": ("scheduler", "SimReport"),
+    "PLACEMENTS": ("scheduler", "PLACEMENTS"),
+    "simulate": ("scheduler", "simulate"),
+    "Trace": ("trace", "Trace"),
+    "TaskEvent": ("trace", "TaskEvent"),
+    "CriticalPath": ("trace", "CriticalPath"),
+    "critical_path": ("trace", "critical_path"),
+    # gradient compression (jax)
+    "compressed_grad_tree": ("compression", "compressed_grad_tree"),
+    "dequantize_int8": ("compression", "dequantize_int8"),
+    "quantize_int8": ("compression", "quantize_int8"),
+    # fault tolerance (jax)
+    "FaultInjector": ("fault", "FaultInjector"),
+    "HeartbeatMonitor": ("fault", "HeartbeatMonitor"),
+    "TrainingRunner": ("fault", "TrainingRunner"),
+    # elastic remeshing (jax)
+    "elastic_remesh_plan": ("elastic", "elastic_remesh_plan"),
+    "reshard_tree": ("elastic", "reshard_tree"),
+}
+
+__all__ = list(_EXPORTS)
+
+
+def __getattr__(name: str):
+    try:
+        mod_name, attr = _EXPORTS[name]
+    except KeyError:
+        raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+    import importlib
+    mod = importlib.import_module(f".{mod_name}", __name__)
+    return getattr(mod, attr)
+
+
+def __dir__():
+    return sorted(__all__)

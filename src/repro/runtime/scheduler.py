@@ -1,0 +1,414 @@
+"""Chunks-and-Tasks runtime simulator: work-stealing scheduler with
+locality-aware chunk placement (paper §2, Figs 9 and 11-14; DESIGN.md §4).
+
+A discrete-event simulation that replays a recorded :class:`CTGraph` task
+DAG over ``p`` virtual workers with CHT-MPI's scheduling semantics:
+
+* **Task tree scheduling** — every worker keeps a deque of ready tasks.
+  A task's children enter the deque of the worker that executed the parent;
+  own work is popped newest-first (depth-first), keeping execution inside
+  one subtree.
+* **Randomized work stealing (§2.1)** — an idle worker picks a uniformly
+  random victim among workers with ready tasks and steals from the *oldest*
+  end of the victim's deque: "work stealing always occurs as high up as
+  possible in the local task tree of the victim process".  Every steal pays
+  :attr:`CostModel.steal_latency_s` on the thief's clock.
+* **Chunk placement** — the output chunk of a task is registered with the
+  :class:`ChunkStore` when the task completes.  *Where* it lands is the
+  pluggable placement policy:
+
+  - ``parent-worker`` (paper §2.1, the locality-aware default): the chunk is
+    owned by the worker that executed the producing task — "each chunk
+    object is by default owned by the worker process that created that
+    chunk".  Placement *follows* the work-stealing execution over the
+    quadtree, which is what makes per-worker communication essentially
+    constant in weak scaling for matrices with data locality (Table 1).
+  - ``round-robin`` / ``random`` (locality-oblivious baselines): ownership
+    is assigned independently of execution; the producing worker must ship
+    the chunk to its owner (the owner *receives* the bytes) and every later
+    consumer fetches it remotely.
+
+* **Communication accounting** — all input fetches are routed through the
+  worker-local bounded LRU chunk cache of :class:`ChunkStore`; bytes
+  received, messages, cache hits and peak owned bytes per worker are
+  accounted exactly as plotted in Figs 11-13.
+* **Modelled wall clock** — task duration is
+  ``task_overhead_s + cost + flops / flops_per_s + fetch + push`` where
+  each cache-miss fetch pays ``latency_s + nbytes / bandwidth_Bps`` and a
+  non-local placement pays the same for the push.  This yields makespans,
+  simulated speedup curves (Fig 9) and active fractions.
+
+The simulator is *persistent across phases*: chunk placements from an
+earlier :meth:`Scheduler.run` (e.g. the task program that built the input
+matrices — paper §7: "the data distribution of input matrices was a result
+of the task executions that generated those matrices") carry over to the
+next run, so the multiply's communication is measured against a realistic
+input distribution.  Call :meth:`reset_stats` between phases to isolate one
+phase's communication.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import random
+from typing import Optional
+
+from repro.core.chunks import ChunkId, ChunkStore
+from repro.core.tasks import CostModel, CTGraph
+
+from .trace import CriticalPath, TaskEvent, Trace, critical_path
+
+PLACEMENTS = ("parent-worker", "round-robin", "random")
+
+__all__ = ["Scheduler", "SimReport", "PLACEMENTS"]
+
+
+@dataclasses.dataclass
+class SimReport:
+    """Per-phase statistics of one :meth:`Scheduler.run` (Figs 9, 11-13)."""
+    makespan: float
+    bytes_received: list[int]
+    messages_received: list[int]
+    peak_owned: list[int]
+    tasks_per_worker: list[int]
+    busy_time: list[float]
+    steals: int
+    n_workers: int = 1
+    placement: str = "parent-worker"
+    bytes_pushed: list[int] = dataclasses.field(default_factory=list)
+    cache_hits: list[int] = dataclasses.field(default_factory=list)
+    steal_time_s: float = 0.0
+    trace: Optional[Trace] = None
+    crit: Optional[CriticalPath] = None
+
+    @property
+    def avg_bytes_received(self) -> float:
+        return sum(self.bytes_received) / len(self.bytes_received)
+
+    @property
+    def max_bytes_received(self) -> int:
+        return max(self.bytes_received)
+
+    @property
+    def active_fraction(self) -> list[float]:
+        return [b / self.makespan if self.makespan > 0 else 0.0
+                for b in self.busy_time]
+
+    @property
+    def work_s(self) -> float:
+        """T1: total busy time across workers."""
+        return sum(self.busy_time)
+
+    @property
+    def parallel_efficiency(self) -> float:
+        from repro.core.analysis import parallel_efficiency
+        return parallel_efficiency(self.work_s, self.makespan,
+                                   self.n_workers)
+
+    def to_dict(self) -> dict:
+        d = {
+            "n_workers": self.n_workers,
+            "placement": self.placement,
+            "makespan_s": self.makespan,
+            "bytes_received": self.bytes_received,
+            "bytes_pushed": self.bytes_pushed,
+            "messages_received": self.messages_received,
+            "peak_owned": self.peak_owned,
+            "tasks_per_worker": self.tasks_per_worker,
+            "steals": self.steals,
+            "parallel_efficiency": self.parallel_efficiency,
+        }
+        if self.crit is not None:
+            d.update(self.crit.to_dict())
+        return d
+
+
+def _pop_enabled(dq: list, now: float, newest: bool
+                 ) -> Optional[tuple[int, float]]:
+    """Pop an entry already enabled at ``now``, or None.
+
+    Entries carry (nid, ready_time); ones with ready_time > now are not yet
+    visible to a worker whose clock is ``now`` (their enabling completion
+    lies in its future).  ``newest=True`` scans newest-first (own work,
+    LIFO), ``newest=False`` oldest-first (steals go as high up the victim's
+    task tree as possible).
+    """
+    order = range(len(dq) - 1, -1, -1) if newest else range(len(dq))
+    for i in order:
+        if dq[i][1] <= now:
+            return dq.pop(i)
+    return None
+
+
+def _place(policy: str, creator: int, chunk_idx: int, p: int,
+           rng: random.Random) -> int:
+    if policy == "parent-worker":
+        return creator
+    if policy == "round-robin":
+        return chunk_idx % p
+    if policy == "random":
+        return rng.randrange(p)
+    raise ValueError(f"unknown placement {policy!r}; pick one of {PLACEMENTS}")
+
+
+class Scheduler:
+    """Discrete-event CHT-MPI cluster simulator over a :class:`CTGraph`.
+
+    >>> sched = Scheduler(seed=0)
+    >>> sched.run(g, n_workers=8)                   # build phase
+    >>> sched.reset_stats()
+    >>> rc = qt_multiply(g, params, ra, rb)
+    >>> rep = sched.run(g, n_workers=8, placement="parent-worker")
+    >>> rep.max_bytes_received, rep.makespan, rep.crit.length_s
+
+    ``n_workers`` and ``placement`` are fixed by the first :meth:`run`;
+    later runs may omit them but must not change them (the chunk store and
+    ownership map are worker-count-specific).
+    """
+
+    def __init__(self, cost: CostModel | None = None,
+                 cache_bytes: int = 1 << 62, seed: int = 0):
+        self.cost = cost or CostModel()
+        self.cache_bytes = cache_bytes
+        self.seed = seed
+        self.rng = random.Random(seed)
+        self.store: Optional[ChunkStore] = None
+        self.n_workers: Optional[int] = None
+        self.placement_policy: Optional[str] = None
+        self.placement: dict[int, ChunkId] = {}   # node id -> chunk id
+        self._owner_of_node: dict[int, int] = {}  # node id -> executing worker
+        self._chunk_counter = 0                   # round-robin state
+
+    # -- lifecycle ----------------------------------------------------------
+    def _configure(self, n_workers: Optional[int], placement: Optional[str]
+                   ) -> None:
+        if self.store is None:
+            self.n_workers = n_workers or 1
+            self.placement_policy = placement or "parent-worker"
+            if self.placement_policy not in PLACEMENTS:
+                raise ValueError(
+                    f"unknown placement {self.placement_policy!r}; "
+                    f"pick one of {PLACEMENTS}")
+            self.store = ChunkStore(self.n_workers, self.cache_bytes)
+        else:
+            if n_workers is not None and n_workers != self.n_workers:
+                raise ValueError(
+                    f"scheduler already configured for {self.n_workers} "
+                    f"workers; cannot re-run with {n_workers}")
+            if placement is not None and placement != self.placement_policy:
+                raise ValueError(
+                    f"scheduler already configured for placement "
+                    f"{self.placement_policy!r}; cannot re-run with "
+                    f"{placement!r}")
+
+    def reset_stats(self) -> None:
+        """Zero per-worker counters; keep placements (phase isolation)."""
+        if self.store is None:       # nothing simulated yet: nothing to zero
+            return
+        for s in self.store.stats:
+            s.bytes_received = 0
+            s.bytes_received_local = 0
+            s.bytes_pushed = 0
+            s.messages_received = 0
+            s.cache_hits = 0
+            s.tasks_executed = 0
+            s.busy_time = 0.0
+
+    # -- the discrete-event loop -------------------------------------------
+    def run(self, g: CTGraph, n_workers: Optional[int] = None,
+            placement: Optional[str] = None, start_worker: int = 0
+            ) -> SimReport:
+        """Simulate all not-yet-simulated nodes of ``g``; returns stats."""
+        self._configure(n_workers, placement)
+        p = self.n_workers
+        g.flush()   # batched leaf waves must run so per-task flops are final
+        todo = [n for n in g.nodes if n.nid not in self._owner_of_node]
+        trace = Trace(p)
+        if not todo:
+            return self._report(0.0, 0, 0.0, trace, g, set())
+        todo_ids = {n.nid for n in todo}
+        done_before = set(self._owner_of_node)
+
+        # dependency bookkeeping: a task is runnable once its parent has
+        # executed (it is then "registered") and all fetched deps are done.
+        # ready_after[nid] is the virtual time of the last enabling event
+        # (parent or dependency completion): execution may not start before
+        # it, no matter how idle a worker's clock is.
+        pending: dict[int, int] = {}
+        dependents: dict[int, list[int]] = {}
+        registered: dict[int, bool] = {}
+        ready_after: dict[int, float] = {}
+        for n in todo:
+            cnt = 0
+            for d in n.deps:
+                dn = g.resolve(d.nid)
+                if dn is not None and dn in todo_ids:
+                    cnt += 1
+                    dependents.setdefault(dn, []).append(n.nid)
+            pending[n.nid] = cnt
+            registered[n.nid] = (n.parent is None or n.parent not in todo_ids)
+            ready_after[n.nid] = 0.0
+
+        deques: list[list[tuple[int, float]]] = [[] for _ in range(p)]
+        free_at = [0.0] * p
+        n_steals = 0
+        steal_time = 0.0
+
+        def push_ready(nid: int, worker: int) -> None:
+            self._owner_of_node[nid] = worker
+            deques[worker].append((nid, ready_after[nid]))
+
+        for n in todo:
+            if registered[n.nid] and pending[n.nid] == 0:
+                push_ready(n.nid, start_worker)
+
+        time_now = 0.0
+        heap = [(0.0, w) for w in range(p)]
+        heapq.heapify(heap)
+        executed = 0
+        total = len(todo)
+        blocked: list[tuple[float, int]] = []   # workers with no ready work
+
+        while executed < total:
+            if not heap:
+                if not blocked:
+                    raise RuntimeError("deadlock in task graph simulation")
+                t = min(b[0] for b in blocked)
+                for bt, w in blocked:
+                    heapq.heappush(heap, (max(bt, t), w))
+                blocked = []
+                continue
+            t, w = heapq.heappop(heap)
+            time_now = max(time_now, t)
+            nid = None
+            stolen = False
+            got = _pop_enabled(deques[w], t, newest=True)   # own work first
+            if got is not None:
+                nid, _ = got
+            else:
+                victims = [v for v in range(p) if v != w
+                           and any(rt <= t for _, rt in deques[v])]
+                if victims:
+                    v = self.rng.choice(victims)
+                    nid, _ = _pop_enabled(deques[v], t, newest=False)
+                    self._owner_of_node[nid] = w
+                    t += self.cost.steal_latency_s
+                    steal_time += self.cost.steal_latency_s
+                    n_steals += 1
+                    stolen = True
+            if nid is None:
+                # nothing enabled yet anywhere at this worker's clock: wait
+                # for the next enabling event (if one is pending) or block
+                future = [rt for dq in deques for _, rt in dq]
+                if future:
+                    heapq.heappush(heap, (min(future), w))
+                else:
+                    blocked.append((t, w))
+                continue
+
+            node = g.nodes[nid]
+            st = self.store.stats[w]
+            # fetch inputs through the chunk cache (misses = communication)
+            fetch_time = 0.0
+            rb0, rm0 = st.bytes_received, st.messages_received
+            for d in node.deps:
+                if not d.fetch:
+                    continue
+                dn = g.resolve(d.nid)
+                cid = self.placement.get(dn) if dn is not None else None
+                if cid is not None:
+                    before = st.bytes_received
+                    msgs_before = st.messages_received
+                    self.store.fetch(w, cid)
+                    dbytes = st.bytes_received - before
+                    dmsgs = st.messages_received - msgs_before
+                    fetch_time += dbytes / self.cost.bandwidth_Bps \
+                        + dmsgs * self.cost.latency_s
+            remote_bytes = st.bytes_received - rb0
+            remote_msgs = st.messages_received - rm0
+
+            # produce + place the output chunk
+            push_time = 0.0
+            pushed_bytes = 0
+            if node.alias_of is None and node.value is not None:
+                owner = _place(self.placement_policy, w, self._chunk_counter,
+                               p, self.rng)
+                self._chunk_counter += 1
+                cid = self.store.register_pushed(w, owner, node.value,
+                                                 node.out_nbytes)
+                self.placement[nid] = cid
+                if owner != w:
+                    pushed_bytes = node.out_nbytes
+                    push_time = node.out_nbytes / self.cost.bandwidth_Bps \
+                        + self.cost.latency_s
+            elif node.alias_of is not None:
+                rn = g.resolve(nid)
+                if rn in self.placement:
+                    self.placement[nid] = self.placement[rn]
+
+            dur = (self.cost.task_overhead_s + node.cost
+                   + node.flops / self.cost.flops_per_s + fetch_time
+                   + push_time)
+            t_end = t + dur
+            st.tasks_executed += 1
+            st.busy_time += dur
+            trace.append(TaskEvent(nid=nid, kind=node.kind, worker=w,
+                                   start=t, end=t_end, stolen=stolen,
+                                   remote_bytes=remote_bytes,
+                                   remote_msgs=remote_msgs,
+                                   pushed_bytes=pushed_bytes))
+
+            executed += 1
+            for c in node.children:
+                if c in registered and not registered[c]:
+                    registered[c] = True
+                    ready_after[c] = max(ready_after[c], t_end)
+                    if pending[c] == 0:
+                        push_ready(c, w)
+            for dep_nid in dependents.get(nid, ()):
+                pending[dep_nid] -= 1
+                ready_after[dep_nid] = max(ready_after[dep_nid], t_end)
+                if pending[dep_nid] == 0 and registered[dep_nid]:
+                    parent = g.nodes[dep_nid].parent
+                    push_ready(dep_nid,
+                               self._owner_of_node.get(parent, w)
+                               if parent is not None else w)
+            free_at[w] = t_end
+            heapq.heappush(heap, (t_end, w))
+            if blocked:
+                for bt, bw in blocked:
+                    heapq.heappush(heap, (max(bt, time_now), bw))
+                blocked = []
+
+        makespan = max(free_at)
+        return self._report(makespan, n_steals, steal_time, trace, g,
+                            done_before)
+
+    def _report(self, makespan: float, steals: int, steal_time: float,
+                trace: Trace, g: CTGraph, done_before: set) -> SimReport:
+        st = self.store.stats
+        crit = critical_path(g, trace, done_before) if len(trace) else None
+        return SimReport(
+            makespan=makespan,
+            bytes_received=[s.bytes_received for s in st],
+            messages_received=[s.messages_received for s in st],
+            peak_owned=[s.peak_owned_bytes for s in st],
+            tasks_per_worker=[s.tasks_executed for s in st],
+            busy_time=[s.busy_time for s in st],
+            steals=steals,
+            n_workers=self.n_workers,
+            placement=self.placement_policy,
+            bytes_pushed=[s.bytes_pushed for s in st],
+            cache_hits=[s.cache_hits for s in st],
+            steal_time_s=steal_time,
+            trace=trace,
+            crit=crit,
+        )
+
+
+def simulate(g: CTGraph, n_workers: int, placement: str = "parent-worker",
+             cost: CostModel | None = None, cache_bytes: int = 1 << 62,
+             seed: int = 0) -> SimReport:
+    """One-shot convenience: simulate the whole graph in a single phase."""
+    sched = Scheduler(cost=cost, cache_bytes=cache_bytes, seed=seed)
+    return sched.run(g, n_workers=n_workers, placement=placement)

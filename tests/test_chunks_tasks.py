@@ -57,6 +57,54 @@ class TestChunkStore:
         st = ChunkStore(1)
         assert st.fetch(0, None) is None
 
+    def test_free_invalidates_remote_caches(self):
+        """free() must drop cached copies everywhere: stale entries pinned
+        _cache_used forever and could serve wrong bytes on id reuse."""
+        st = ChunkStore(3, cache_bytes=10_000)
+        cid = st.register(0, _Blob(600))
+        st.fetch(1, cid)
+        st.fetch(2, cid)
+        assert st.cache_used(1) == 600 and st.cache_used(2) == 600
+        st.free(cid)
+        assert st.cache_used(1) == 0 and st.cache_used(2) == 0
+        assert st.stats[0].owned_bytes == 0
+
+    def test_free_then_eviction_reaccounts(self):
+        """Post-free, the cache budget is actually available again: a new
+        chunk fits without evicting, and a re-fetch re-accounts comm."""
+        st = ChunkStore(2, cache_bytes=1000)
+        a = st.register(0, _Blob(600))
+        st.fetch(1, a)
+        st.free(a)                      # cache slot reclaimed
+        b = st.register(0, _Blob(600))
+        c = st.register(0, _Blob(300))
+        st.fetch(1, b)
+        st.fetch(1, c)                  # both fit: 900 <= 1000, no evict
+        assert st.cache_used(1) == 900
+        st.fetch(1, b), st.fetch(1, c)  # cache hits, no extra comm
+        assert st.stats[1].bytes_received == 600 + 600 + 300
+        assert st.stats[1].cache_hits == 2
+
+    def test_register_pushed_accounts_owner_reception(self):
+        """Placement away from the creator ships the data to the owner."""
+        st = ChunkStore(2)
+        cid = st.register_pushed(0, 1, _Blob(512))
+        assert cid.owner == 1
+        assert st.stats[1].bytes_received == 512
+        assert st.stats[1].bytes_pushed == 512
+        assert st.stats[1].messages_received == 1
+        # the creator keeps a cached copy: its own fetch is free
+        st.fetch(0, cid)
+        assert st.stats[0].bytes_received == 0
+        assert st.stats[0].cache_hits == 1
+
+    def test_register_pushed_local_is_plain_register(self):
+        st = ChunkStore(2)
+        cid = st.register_pushed(1, 1, _Blob(512))
+        assert cid.owner == 1
+        assert st.stats[1].bytes_received == 0
+        assert st.stats[1].bytes_pushed == 0
+
     def test_peak_owned_tracks_frees(self):
         st = ChunkStore(1)
         a = st.register(0, _Blob(100))

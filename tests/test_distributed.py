@@ -81,6 +81,51 @@ class TestPlanning:
         assert (owner[4:, :4] == 2).all()
         assert (owner[4:, 4:] == 3).all()
 
+    @pytest.mark.parametrize("fn", [dist.morton_owner, dist.rowmajor_owner])
+    def test_owner_balanced_when_not_divisible(self, fn):
+        """grid*grid % n_dev != 0 must not emit owner ids >= n_dev."""
+        for grid, n_dev in [(4, 3), (8, 5), (4, 7), (16, 6)]:
+            owner = fn(grid, n_dev)
+            assert owner.max() < n_dev
+            assert owner.min() == 0
+            counts = np.bincount(owner.ravel(), minlength=n_dev)
+            # balanced clipped split: sizes differ by at most one
+            assert counts.max() - counts.min() <= 1
+
+    @pytest.mark.parametrize("fn", [dist.morton_owner, dist.rowmajor_owner])
+    def test_owner_more_devices_than_cells(self, fn):
+        """n_dev > grid*grid used to raise ZeroDivisionError."""
+        owner = fn(4, 20)
+        assert owner.max() < 20
+        counts = np.bincount(owner.ravel(), minlength=20)
+        assert counts.max() == 1      # no device owns more than one cell
+
+    def test_owner_divisible_case_unchanged(self):
+        """Divisible splits keep the classic z // per assignment (the
+        on-device _owned_mask computes ownership the same way)."""
+        from repro.core import morton
+        grid, n_dev = 8, 4
+        rows = np.repeat(np.arange(grid), grid)
+        cols = np.tile(np.arange(grid), grid)
+        z = morton.encode(rows, cols).astype(np.int64)
+        per = (grid * grid) // n_dev
+        assert (dist.morton_owner(grid, n_dev)[rows, cols] == z // per).all()
+        lin = np.arange(grid * grid).reshape(grid, grid)
+        np.testing.assert_array_equal(dist.rowmajor_owner(grid, n_dev),
+                                      lin // per)
+
+    def test_owned_mask_consistent_with_morton_owner(self):
+        """The traced per-device ownership mask must agree with the host
+        owner map for every n_dev, including non-divisible splits —
+        otherwise halo_spmm silently drops blocks owned by nobody."""
+        for grid, n_dev in [(8, 4), (4, 3), (8, 5), (4, 7)]:
+            owner = dist.morton_owner(grid, n_dev)
+            for dev in range(n_dev):
+                mask = np.asarray(dist._owned_mask(grid, n_dev, dev))
+                np.testing.assert_array_equal(mask, owner == dev,
+                                              err_msg=f"{grid=} {n_dev=} "
+                                              f"{dev=}")
+
     def test_halo_hops_smaller_for_narrow_band(self):
         _, _, wide = self._plan(d=24)
         _, _, narrow = self._plan(d=6)
