@@ -1,8 +1,9 @@
 """Paper Table 1 + Figs 12-13: weak-scaling communication per worker.
 
-Drives the Chunks-and-Tasks runtime simulator (repro.runtime.scheduler:
-work stealing, chunk cache, owner-embedded ids) over the paper's pattern
-families with matched work per worker (N proportional to p), under both
+Drives the Chunks-and-Tasks runtime simulator through the Session/Matrix
+facade (repro.api over repro.runtime.scheduler: work stealing, chunk
+cache, owner-embedded ids) over the paper's pattern families with matched
+work per worker (N proportional to p), under both
 the locality-aware ``parent-worker`` chunk placement (the paper's model:
 placement follows the work-stealing execution) and the locality-oblivious
 ``random`` baseline:
@@ -28,34 +29,27 @@ import pathlib
 
 import numpy as np
 
+from repro import Session
 from repro.core import analysis as an
 from repro.core.patterns import (banded_mask, divide_space_order,
                                  overlap_pairs, particle_cloud, random_mask,
                                  values_for_mask)
-from repro.core.quadtree import QTParams, qt_from_coo, qt_from_dense
-from repro.core.multiply import qt_multiply, qt_sym_square
-from repro.core.tasks import CTGraph
-from repro.runtime.scheduler import Scheduler
 
 
-def _simulate(g, build_roots_done, p, placement, seed=0):
-    """Build phase then measured phase on a fresh simulated cluster."""
-    sched = Scheduler(seed=seed)
-    sched.run(g, n_workers=p, placement=placement)  # placements follow build
-    sched.reset_stats()
-    build_roots_done(g)
-    return sched.run(g)
+def _measure(sess, p, op):
+    """Build phase then measured phase on the session's cluster."""
+    sess.simulate(p=p)       # placements follow the build task program
+    op()
+    return sess.simulate(fresh_stats=True)
 
 
 def run_banded(p, placement, n_per=256, d=24, leaf_n=64, bs=8, seed=0):
     n = n_per * p
     a = values_for_mask(banded_mask(n, d), seed=1, symmetric=True)
-    g = CTGraph()
-    params = QTParams(n, leaf_n, bs)
-    ra = qt_from_dense(g, a, params)
-    rb = qt_from_dense(g, a, params)
-    rep = _simulate(g, lambda g: qt_multiply(g, params, ra, rb), p,
-                    placement, seed)
+    sess = Session(leaf_n=leaf_n, bs=bs, placement=placement, seed=seed)
+    A = sess.from_dense(a)
+    B = sess.from_dense(a)
+    rep = _measure(sess, p, lambda: A @ B)
     sp_bytes = an.spsumma_weak_scaling_elements(2 * d + 1, n_per, p) * 8
     return rep, n, sp_bytes
 
@@ -63,12 +57,10 @@ def run_banded(p, placement, n_per=256, d=24, leaf_n=64, bs=8, seed=0):
 def run_random(p, placement, n_per=64, m=6, leaf_n=16, bs=4, seed=0):
     n = n_per * p
     a = values_for_mask(random_mask(n, m / n, seed=2), seed=1)
-    g = CTGraph()
-    params = QTParams(n, leaf_n, bs)
-    ra = qt_from_dense(g, a, params)
-    rb = qt_from_dense(g, a, params)
-    rep = _simulate(g, lambda g: qt_multiply(g, params, ra, rb), p,
-                    placement, seed)
+    sess = Session(leaf_n=leaf_n, bs=bs, placement=placement, seed=seed)
+    A = sess.from_dense(a)
+    B = sess.from_dense(a)
+    rep = _measure(sess, p, lambda: A @ B)
     sp_bytes = an.spsumma_weak_scaling_elements(m, n_per, p) * 8
     return rep, n, sp_bytes
 
@@ -83,11 +75,10 @@ def run_overlap(p, placement, radius=4.0, seed=0):
     rows, cols = overlap_pairs(coords, radius, order=order)
     npart = len(coords)
     n = 1 << int(np.ceil(np.log2(npart)))
-    params = QTParams(n, max(n // 16, 32), 8)
-    g = CTGraph()
-    rs = qt_from_coo(g, rows, cols, params, upper=True)
-    rep = _simulate(g, lambda g: qt_sym_square(g, params, rs), p,
-                    placement, seed)
+    sess = Session(leaf_n=max(n // 16, 32), bs=8, placement=placement,
+                   seed=seed)
+    S = sess.from_pattern(rows, cols, n, upper=True)
+    rep = _measure(sess, p, S.sym_square)
     # SpSUMMA reference with m = avg nnz/row of S, weak scaling in npart
     m = len(rows) / npart
     sp_bytes = an.spsumma_weak_scaling_elements(m, npart / p, p) * 8

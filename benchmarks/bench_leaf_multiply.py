@@ -50,12 +50,9 @@ def csv_mode() -> None:
 def compare_backends(n: int, pattern: str, leaf_n: int, bs: int,
                      seed: int) -> dict:
     """Quadtree multiply through every leaf backend; JSON-able record."""
+    from repro import Session
     from repro.core.engine import PallasEngine
-    from repro.core.multiply import (qt_multiply, total_flops,
-                                     total_multiply_tasks)
     from repro.core.patterns import banded_mask, random_mask, values_for_mask
-    from repro.core.quadtree import QTParams, qt_from_dense, qt_to_dense
-    from repro.core.tasks import CTGraph
 
     if pattern == "banded":
         mask = banded_mask(n, max(n // 32, 4))
@@ -63,7 +60,6 @@ def compare_backends(n: int, pattern: str, leaf_n: int, bs: int,
         mask = random_mask(n, 0.08, seed=seed)
     a = values_for_mask(mask, seed=seed)
     b = values_for_mask(mask, seed=seed + 1)
-    params = QTParams(n, leaf_n, bs)
 
     # engine instances bind to one graph, so each timed run gets a fresh one
     backends = {
@@ -81,14 +77,14 @@ def compare_backends(n: int, pattern: str, leaf_n: int, bs: int,
         # wall_s_cold), the second is the steady-state comparison number
         walls = []
         for _ in range(2):
-            g = CTGraph(engine=mk_engine())
-            ra = qt_from_dense(g, a, params)
-            rb = qt_from_dense(g, b, params)
+            sess = Session(engine=mk_engine(), leaf_n=leaf_n, bs=bs)
+            A = sess.from_dense(a)
+            B = sess.from_dense(b)
             t0 = time.perf_counter()
-            rc = qt_multiply(g, params, ra, rb)
-            g.flush()
+            C = A @ B
+            sess.flush()
             walls.append(time.perf_counter() - t0)
-        out = qt_to_dense(g, rc, params)
+        out = C.to_dense()
         if ref is None:
             ref = out
         else:
@@ -96,10 +92,10 @@ def compare_backends(n: int, pattern: str, leaf_n: int, bs: int,
         entry = {
             "wall_s": walls[-1],
             "wall_s_cold": walls[0],
-            "multiply_tasks": total_multiply_tasks(g),
-            "flops": total_flops(g),
+            "multiply_tasks": sess.n_multiply_tasks,
+            "flops": sess.flops,
         }
-        stats = g.engine.stats()
+        stats = sess.engine_stats()
         if stats:
             entry.update({
                 "kernel": stats.get("kernel"),

@@ -1,18 +1,17 @@
 """Paper Figs 10-11: S^2 symmetric square of overlap matrices.
 
 3-D particle clouds (the water-cluster stand-in), divide-space ordering,
-symmetric square on the simulated cluster.  Validates: near-linear time
-in system size, per-worker memory/comm statistics.
+symmetric square on the simulated cluster — all through the
+Session/Matrix facade.  Validates: near-linear time in system size,
+per-worker memory/comm statistics.
 CSV: n_basis,nnz_per_row_S,nnz_per_row_S2,wall_s,peak_mem_MB_avg,
 recv_MB_avg,recv_MB_max.
 """
 import numpy as np
 
+from repro import Session
 from repro.core.patterns import (divide_space_order, overlap_pairs,
-                                 particle_cloud, values_for_mask)
-from repro.core.quadtree import QTParams, qt_from_coo, qt_stats
-from repro.core.multiply import qt_sym_square
-from repro.core.tasks import ClusterSim, CTGraph
+                                 particle_cloud)
 
 
 def main() -> None:
@@ -27,18 +26,15 @@ def main() -> None:
         rows, cols = overlap_pairs(coords, 4.0, order=order)
         npart = len(coords)
         n = 1 << int(np.ceil(np.log2(npart)))
-        params = QTParams(n, max(n // 16, 32), 8)
-        g = CTGraph()
-        rs = qt_from_coo(g, rows, cols, params, upper=True)
-        sim = ClusterSim(workers, seed=0)
-        sim.run(g)
-        sim.reset_stats()
-        rc = qt_sym_square(g, params, rs)
-        res = sim.run(g)
-        st = qt_stats(g, rc)
+        sess = Session(leaf_n=max(n // 16, 32), bs=8, p=workers, seed=0)
+        S = sess.from_pattern(rows, cols, n, upper=True)
+        sess.simulate()
+        S2 = S.sym_square()
+        res = sess.simulate(fresh_stats=True)
+        st = S2.stats()
         nnz_s = len(rows) / npart
         nnz_s2 = 0 if st["nnz_blocks"] == 0 else \
-            st["nnz_blocks"] * params.bs ** 2 / npart
+            st["nnz_blocks"] * sess.bs ** 2 / npart
         mem = np.mean(res.peak_owned) / 1e6
         recv = np.asarray(res.bytes_received) / 1e6
         walls.append(res.makespan)

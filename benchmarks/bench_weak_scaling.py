@@ -12,33 +12,26 @@ import argparse
 import json
 import pathlib
 
+from repro import Session
 from repro.core import analysis as an
 from repro.core.patterns import banded_mask, values_for_mask
-from repro.core.quadtree import QTParams, qt_from_dense
-from repro.core.multiply import qt_multiply, qt_sym_square, total_flops
-from repro.core.tasks import CTGraph
-from repro.runtime.scheduler import Scheduler
 
 
 def run(op, workers, n_per, d, leaf_n, bs):
     n = n_per * workers
-    params = QTParams(n, leaf_n, bs)
     a = values_for_mask(banded_mask(n, d), seed=1, symmetric=True)
-    g = CTGraph()
-    sched = Scheduler(seed=0)
+    sess = Session(leaf_n=leaf_n, bs=bs, p=workers, seed=0)
     if op == "multiply":
-        ra = qt_from_dense(g, a, params)
-        rb = qt_from_dense(g, a, params)
-        sched.run(g, n_workers=workers)
-        sched.reset_stats()
-        qt_multiply(g, params, ra, rb)
+        A = sess.from_dense(a)
+        B = sess.from_dense(a)
+        sess.simulate()
+        _ = A @ B
     else:
-        rs = qt_from_dense(g, a, params, upper=True)
-        sched.run(g, n_workers=workers)
-        sched.reset_stats()
-        qt_sym_square(g, params, rs)
-    rep = sched.run(g)
-    return rep, total_flops(g), n
+        S = sess.from_dense(a, upper=True)
+        sess.simulate()
+        _ = S.sym_square()
+    rep = sess.simulate(fresh_stats=True)
+    return rep, sess.flops, n
 
 
 def main() -> None:

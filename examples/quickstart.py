@@ -1,13 +1,13 @@
-"""Quickstart: locality-aware block-sparse matmul, host library + TPU engine.
+"""Quickstart: locality-aware block-sparse matmul through the Session API.
 
     PYTHONPATH=src python examples/quickstart.py
 
-1. Build a banded matrix, represent it as a sparse quadtree of chunks
-   (paper §3), multiply with the Chunks-and-Tasks library on a simulated
+1. Build banded matrices as sparse quadtrees of chunks (paper §3) with a
+   :class:`repro.Session`, multiply with ``C = A @ B`` on a simulated
    8-worker cluster, and report the communication statistics that make
    the paper's point (locality => tiny comm per worker).
-2. Re-run the multiply with the **pallas leaf backend**
-   (``CTGraph(engine="pallas")``): leaf work across the whole quadtree is
+2. Re-run the multiply in a **pallas-engine session**
+   (``Session(engine="pallas")``): leaf work across the whole quadtree is
    batched into fused Pallas kernel waves (paper §4.1 batched leaf-level
    work), and the flop/bytes report shows what was batched.
 3. Run the same multiply through the static TPU engine (mask-pyramid
@@ -17,14 +17,11 @@
 import numpy as np
 import jax.numpy as jnp
 
+from repro import Session
 from repro.core import blocksparse as bsp
 from repro.core.bsmm import bsmm
 from repro.core.patterns import (banded_mask, block_mask_from_element_mask,
                                  values_for_mask)
-from repro.core.quadtree import QTParams, qt_from_dense, qt_to_dense
-from repro.core.multiply import (qt_multiply, total_add_tasks, total_flops,
-                                 total_multiply_tasks)
-from repro.core.tasks import ClusterSim, CTGraph
 
 
 def main() -> None:
@@ -34,20 +31,16 @@ def main() -> None:
     want = a @ b
 
     # --- 1. the paper's library on a simulated cluster ------------------
-    params = QTParams(n, leaf_n=64, bs=bs)
-    g = CTGraph()
-    ra = qt_from_dense(g, a, params)
-    rb = qt_from_dense(g, b, params)
-    sim = ClusterSim(n_workers=8, seed=0)
-    sim.run(g)                 # construction task program places inputs
-    sim.reset_stats()
-    rc = qt_multiply(g, params, ra, rb)
-    res = sim.run(g)
-    got = qt_to_dense(g, rc, params)
-    np.testing.assert_allclose(got, want, atol=1e-3)
+    sess = Session(leaf_n=64, bs=bs, p=8, seed=0)
+    A = sess.from_dense(a)
+    B = sess.from_dense(b)
+    sess.simulate()                    # construction task program places inputs
+    C = A @ B
+    res = sess.simulate(fresh_stats=True)
+    np.testing.assert_allclose(C.to_dense(), want, atol=1e-3)
     print("quadtree multiply: OK")
-    print(f"  multiply tasks: {total_multiply_tasks(g)}, "
-          f"add tasks: {total_add_tasks(g)} (mult > add, paper §5)")
+    print(f"  multiply tasks: {sess.n_multiply_tasks}, "
+          f"add tasks: {sess.n_add_tasks} (mult > add, paper §5)")
     print(f"  virtual makespan: {res.makespan*1e3:.2f} ms on 8 workers, "
           f"steals: {res.steals}")
     mb = np.asarray(res.bytes_received) / 1e6
@@ -55,15 +48,12 @@ def main() -> None:
           " MB  <- locality keeps this flat as the cluster grows")
 
     # --- 2. same multiply, pallas leaf backend (batched kernel waves) ---
-    g2 = CTGraph(engine="pallas")
-    ra2 = qt_from_dense(g2, a, params)
-    rb2 = qt_from_dense(g2, b, params)
-    rc2 = qt_multiply(g2, params, ra2, rb2)
-    got2 = qt_to_dense(g2, rc2, params)       # flushes the batched waves
-    np.testing.assert_allclose(got2, want, atol=1e-3)
-    st = g2.engine.stats()
+    sess2 = Session(engine="pallas", leaf_n=64, bs=bs)
+    C2 = sess2.from_dense(a) @ sess2.from_dense(b)
+    np.testing.assert_allclose(C2.to_dense(), want, atol=1e-3)
+    st = sess2.engine_stats()
     print('leaf backend engine="pallas": OK (matches engine="numpy")')
-    print(f"  flop/bytes report: {total_flops(g2):.3g} useful flops in "
+    print(f"  flop/bytes report: {sess2.flops:.3g} useful flops in "
           f"{st['waves']} fused wave(s); {st['batched_pairs']} block pairs "
           f"batched ({st['padded_pairs'] - st['batched_pairs']} padding), "
           f"{st['bytes_packed'] / 1e6:.2f} MB packed, "
@@ -73,9 +63,9 @@ def main() -> None:
     ma = block_mask_from_element_mask(np.abs(a) > 0, bs)
     mb_ = block_mask_from_element_mask(np.abs(b) > 0, bs)
     caps = bsp.plan_caps(ma, mb_)
-    A = bsp.from_dense(jnp.asarray(a), bs, int(ma.sum()) + 8)
-    B = bsp.from_dense(jnp.asarray(b), bs, int(mb_.sum()) + 8)
-    c, info = bsmm(A, B, pair_caps=caps, cap_c=bsp.plan_c_cap(ma, mb_))
+    A_ = bsp.from_dense(jnp.asarray(a), bs, int(ma.sum()) + 8)
+    B_ = bsp.from_dense(jnp.asarray(b), bs, int(mb_.sum()) + 8)
+    c, info = bsmm(A_, B_, pair_caps=caps, cap_c=bsp.plan_c_cap(ma, mb_))
     np.testing.assert_allclose(np.asarray(bsp.to_dense(c)), want,
                                atol=1e-2)
     print("TPU block-sparse engine: OK")

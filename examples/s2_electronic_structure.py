@@ -2,20 +2,19 @@
 
     PYTHONPATH=src python examples/s2_electronic_structure.py
 
-End to end: generate a 3-D particle system (the water-cluster stand-in),
-order basis functions with the recursive divide-space procedure, build the
-overlap matrix S directly from nonzero coordinates (no dense detour),
-square it with the symmetric-square task program on a simulated cluster,
-truncate S^2 by Frobenius norm (paper §6.2), and report the Fig 10/11
-quantities: wall time scaling, per-worker memory, per-worker comm.
+End to end through the :class:`repro.Session` facade: generate a 3-D
+particle system (the water-cluster stand-in), order basis functions with
+the recursive divide-space procedure, build the overlap matrix S directly
+from nonzero coordinates (no dense detour, ``Session.from_pattern``),
+square it with ``S.sym_square()`` on a simulated cluster, and report the
+Fig 10/11 quantities: wall time scaling, per-worker memory, per-worker
+comm.
 """
 import numpy as np
 
+from repro import Session
 from repro.core.patterns import (divide_space_order, overlap_pairs,
                                  particle_cloud)
-from repro.core.quadtree import QTParams, qt_from_coo, qt_frob2, qt_stats
-from repro.core.multiply import qt_sym_square, total_multiply_tasks
-from repro.core.tasks import ClusterSim, CTGraph
 
 
 def gaussian_overlap(coords, order):
@@ -39,23 +38,20 @@ def main() -> None:
         rows, cols = overlap_pairs(coords, 4.5, order=order)
         npart = len(coords)
         n = 1 << int(np.ceil(np.log2(npart)))
-        params = QTParams(n, max(n // 16, 32), 8)
 
-        g = CTGraph()
-        rs = qt_from_coo(g, rows, cols, params,
-                         value_fn=gaussian_overlap(coords, order),
-                         upper=True)
-        sim = ClusterSim(workers, seed=0)
-        sim.run(g)                      # S construction places chunks
-        sim.reset_stats()
-        rc = qt_sym_square(g, params, rs)
-        res = sim.run(g)
+        sess = Session(leaf_n=max(n // 16, 32), bs=8, p=workers, seed=0)
+        S = sess.from_pattern(rows, cols, n,
+                              value_fn=gaussian_overlap(coords, order),
+                              upper=True)
+        sess.simulate()                 # S construction places chunks
+        S2 = S.sym_square()
+        res = sess.simulate(fresh_stats=True)
 
-        frob = np.sqrt(qt_frob2(g, rc))
+        frob = np.sqrt(S2.frob2())
         recv = np.asarray(res.bytes_received) / 1e6
         mem = np.mean(res.peak_owned) / 1e6
         print(f"{npart:7d}  {len(rows)/npart:9.1f}  "
-              f"{total_multiply_tasks(g):10d}  {res.makespan*1e3:7.2f}  "
+              f"{sess.n_multiply_tasks:10d}  {res.makespan*1e3:7.2f}  "
               f"{mem:9.2f}  {recv.mean():6.2f},{recv.max():6.2f}  "
               f"{frob:8.1f}")
     print("\nwall time grows ~linearly with system size; comm per worker "

@@ -1,40 +1,35 @@
 """Walkthrough: the Chunks-and-Tasks runtime simulator (DESIGN.md §4).
 
-Builds a banded matrix as a task program, multiplies it, and replays the
-recorded DAG on a simulated 8-worker cluster under the paper's
-locality-aware chunk placement and the locality-oblivious baselines.
-Prints per-worker communication (the Figs 11-13 quantities), the
-critical-path decomposition behind the weak-scaling claim (eq (13)/(14)),
-and an ASCII Gantt chart of worker occupancy.
+Builds a banded matrix as a task program through the :class:`repro.Session`
+facade, multiplies it with ``A @ B``, and replays the recorded DAG on a
+simulated 8-worker cluster under the paper's locality-aware chunk
+placement and the locality-oblivious baselines.  Prints per-worker
+communication (the Figs 11-13 quantities), the critical-path decomposition
+behind the weak-scaling claim (eq (13)/(14)), and an ASCII Gantt chart of
+worker occupancy.
 
 Run: PYTHONPATH=src python examples/simulate_runtime.py
 """
 import numpy as np
 
+from repro import Session
 from repro.core import analysis as an
 from repro.core.patterns import banded_mask, values_for_mask
-from repro.core.quadtree import QTParams, qt_from_dense, qt_to_dense
-from repro.core.multiply import qt_multiply
-from repro.core.tasks import CTGraph
-from repro.runtime.scheduler import PLACEMENTS, Scheduler
+from repro.runtime.scheduler import PLACEMENTS
 
 P = 8
 N, D, LEAF, BS = 1024, 24, 32, 8
 
 
 def simulate(placement: str):
-    params = QTParams(N, LEAF, BS)
     a = values_for_mask(banded_mask(N, D), seed=1, symmetric=True)
-    g = CTGraph()
-    sched = Scheduler(seed=0)
-    ra = qt_from_dense(g, a, params)
-    rb = qt_from_dense(g, a, params)
-    sched.run(g, n_workers=P, placement=placement)   # build phase
-    sched.reset_stats()
-    rc = qt_multiply(g, params, ra, rb)
-    rep = sched.run(g)                               # measured multiply
-    np.testing.assert_allclose(qt_to_dense(g, rc, params), a @ a,
-                               atol=1e-12)
+    sess = Session(leaf_n=LEAF, bs=BS, p=P, placement=placement, seed=0)
+    A = sess.from_dense(a)
+    B = sess.from_dense(a)       # duplicated input, stored twice here —
+    sess.simulate()              # opt-in Session(dedup=True) stores it once
+    C = A @ B
+    rep = sess.simulate(fresh_stats=True)            # measured multiply
+    np.testing.assert_allclose(C.to_dense(), a @ a, atol=1e-12)
     return rep
 
 

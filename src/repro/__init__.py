@@ -1,0 +1,24 @@
+"""repro: locality-aware block-sparse matmul in the Chunks and Tasks model.
+
+Public API: the :class:`Session`/:class:`Matrix` facade (``repro.api``) —
+operator-overloaded quadtree matrices over one context object.  The
+subsystems remain importable directly (``repro.core``, ``repro.runtime``,
+``repro.kernels``, ...); the facade is a thin compiler onto them.
+
+Imports are lazy (PEP 562) so ``import repro`` stays cheap and pulling in
+a submodule never drags jax into processes that don't need it.
+"""
+
+__all__ = ["Session", "Matrix", "api", "core", "runtime"]
+
+_SUBPACKAGES = ("api", "core", "runtime", "kernels")
+
+
+def __getattr__(name):
+    if name in ("Session", "Matrix"):
+        from repro import api
+        return getattr(api, name)
+    if name in _SUBPACKAGES:
+        import importlib
+        return importlib.import_module(f"repro.{name}")
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

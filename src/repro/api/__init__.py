@@ -1,0 +1,21 @@
+"""Unified Session/Matrix facade — the public front door of the repo.
+
+::
+
+    from repro import Session
+
+    sess = Session(engine="pallas", placement="parent", leaf_n=64, bs=8)
+    A, B = sess.from_dense(a), sess.from_dense(b)
+    sess.simulate(p=8)                       # build phase places inputs
+    C = (A @ B).T + sess.from_dense(c)
+    rep = sess.simulate(fresh_stats=True)    # measured phase (Figs 11-13)
+    C.to_dense()
+
+Everything compiles to the documented internal layer (``qt_*`` task
+programs over a raw ``CTGraph``) — see DESIGN.md for the mapping and
+README.md for the migration table from the free-function API.
+"""
+from .matrix import Matrix
+from .session import PLACEMENT_ALIASES, Session
+
+__all__ = ["Session", "Matrix", "PLACEMENT_ALIASES"]

@@ -1,0 +1,194 @@
+"""Matrix: operator-overloaded handle over a quadtree chunk hierarchy.
+
+A :class:`Matrix` wraps ``(session, root node id, QTParams)`` plus two
+bits of algebraic state — a **lazy transpose flag** and the symmetric
+**upper-storage** marker — and compiles every operation down to the
+documented internal ``qt_*`` task programs:
+
+* ``C = A @ B``   → :func:`~repro.core.multiply.qt_multiply` with the
+  pending transpose flags folded into Algorithm 1's ``op(A) op(B)``;
+  a symmetric upper-storage operand routes to
+  :func:`~repro.core.multiply.qt_sym_multiply` automatically.
+* ``A + B``       → :func:`~repro.core.multiply.qt_add`; mismatched lazy
+  transposes materialise one side via
+  :func:`~repro.core.multiply.qt_transpose` first.
+* ``A.T``         → flips the lazy flag (no task); symmetric matrices
+  return themselves (A = Aᵀ).
+* ``A.sym_square()`` / ``A.syrk()`` / ``S.sym_multiply(B, side=...)`` —
+  the §3.3 symmetric task programs.
+
+Readback (:meth:`to_dense`, :meth:`frob2`, :meth:`nnz_blocks`,
+:meth:`stats`) auto-flushes deferred Pallas leaf waves, so the handle is
+always safe to inspect.  NIL (all-zero) matrices are first-class: their
+root id is None and every operation short-circuits exactly as the
+fallback-execute semantics of Algorithms 1-2 prescribe.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import numpy as np
+
+from repro.core.multiply import (qt_add, qt_multiply, qt_sym_multiply,
+                                 qt_sym_square, qt_syrk, qt_transpose)
+from repro.core.quadtree import QTParams, qt_frob2, qt_stats, qt_to_dense
+
+
+class Matrix:
+    """Handle to a quadtree matrix registered in a session's task graph."""
+
+    __slots__ = ("session", "node", "params", "_t", "upper")
+
+    def __init__(self, session, node: Optional[int], params: QTParams,
+                 t: bool = False, upper: bool = False):
+        self.session = session
+        self.node = node            # root chunk's node id; None == NIL
+        self.params = params
+        self._t = t and not upper   # symmetric storage: A == Aᵀ
+        self.upper = upper
+
+    # -- construction (delegates to the session) ----------------------------
+    @classmethod
+    def from_dense(cls, session, a: np.ndarray, **kw) -> "Matrix":
+        """``Matrix.from_dense(sess, a)`` == ``sess.from_dense(a)``."""
+        return session.from_dense(a, **kw)
+
+    @classmethod
+    def from_pattern(cls, session, rows, cols, n: int, **kw) -> "Matrix":
+        """Build from nonzero coordinates (no dense detour)."""
+        return session.from_pattern(rows, cols, n, **kw)
+
+    # -- bookkeeping ---------------------------------------------------------
+    @property
+    def n(self) -> int:
+        """Global matrix dimension."""
+        return self.params.n
+
+    @property
+    def is_nil(self) -> bool:
+        """True for the all-zero matrix (NIL chunk id at the root)."""
+        return self.session.graph.is_nil(self.node)
+
+    def __repr__(self) -> str:
+        flags = "".join([".T" if self._t else "",
+                         ", upper" if self.upper else "",
+                         ", NIL" if self.node is None else ""])
+        return f"Matrix(n={self.n}, node={self.node}{flags})"
+
+    def _check(self, other: "Matrix", op: str) -> None:
+        if not isinstance(other, Matrix):
+            raise TypeError(f"{op}: expected a Matrix, got {type(other)!r}")
+        if other.session is not self.session:
+            raise ValueError(f"{op}: operands belong to different Sessions")
+        if other.params != self.params:
+            raise ValueError(f"{op}: operand quadtree parameters differ "
+                             f"({self.params} vs {other.params})")
+
+    def _materialized(self) -> Optional[int]:
+        """Root id with any pending lazy transpose materialised.
+
+        Materialisations are cached per source node on the session, so a
+        reused ``.T`` handle registers the transpose task program once.
+        """
+        if not self._t:
+            return self.node
+        cache = self.session._transpose_cache
+        if self.node not in cache:
+            cache[self.node] = qt_transpose(self.session.graph,
+                                            self.params, self.node)
+        return cache[self.node]
+
+    # -- algebra -------------------------------------------------------------
+    @property
+    def T(self) -> "Matrix":
+        """Lazy transpose: flips a flag, registers no task.  The flag is
+        folded into the next multiply (Algorithm 1's op(A) op(B))."""
+        if self.upper:
+            return self             # symmetric: A == Aᵀ
+        return Matrix(self.session, self.node, self.params, t=not self._t)
+
+    def transpose(self) -> "Matrix":
+        return self.T
+
+    def __matmul__(self, other: "Matrix") -> "Matrix":
+        self._check(other, "@")
+        g, p = self.session.graph, self.params
+        if self.upper and other.upper:
+            raise ValueError(
+                "@: both operands use symmetric upper storage; the library "
+                "multiplies symmetric x plain (qt_sym_multiply). Rebuild "
+                "one operand without upper=True")
+        if self.upper:      # C = S B
+            nid = qt_sym_multiply(g, p, self.node, other._materialized(),
+                                  side="left")
+            return Matrix(self.session, nid, p)
+        if other.upper:     # C = B S
+            nid = qt_sym_multiply(g, p, other.node, self._materialized(),
+                                  side="right")
+            return Matrix(self.session, nid, p)
+        nid = qt_multiply(g, p, self.node, other.node,
+                          ta=self._t, tb=other._t)
+        return Matrix(self.session, nid, p)
+
+    def __add__(self, other: "Matrix") -> "Matrix":
+        self._check(other, "+")
+        if self.upper != other.upper:
+            raise ValueError("+: cannot mix symmetric upper storage and "
+                             "plain matrices; rebuild one operand")
+        g, p = self.session.graph, self.params
+        if self._t == other._t:
+            nid = qt_add(g, p, self.node, other.node)
+            return Matrix(self.session, nid, p, t=self._t,
+                          upper=self.upper)
+        # op mismatch: addition has no op(A) slot — materialise transposes
+        nid = qt_add(g, p, self._materialized(), other._materialized())
+        return Matrix(self.session, nid, p, upper=self.upper)
+
+    def sym_square(self) -> "Matrix":
+        """C = A² for symmetric A in upper storage (paper §3.3): half the
+        multiplies of a general product."""
+        if not self.upper:
+            raise ValueError("sym_square needs symmetric upper storage: "
+                             "build with from_dense(..., upper=True)")
+        nid = qt_sym_square(self.session.graph, self.params, self.node)
+        return Matrix(self.session, nid, self.params, upper=True)
+
+    def syrk(self, trans: bool = False) -> "Matrix":
+        """C = A Aᵀ (or Aᵀ A with ``trans=True``); C in upper storage."""
+        if self.upper:
+            raise ValueError("syrk of a symmetric matrix is sym_square")
+        nid = qt_syrk(self.session.graph, self.params, self.node,
+                      trans=trans != self._t)   # lazy .T folds into trans
+        return Matrix(self.session, nid, self.params, upper=True)
+
+    def sym_multiply(self, other: "Matrix", side: str = "left") -> "Matrix":
+        """C = S B (``side="left"``) or B S (``side="right"``); self is the
+        symmetric upper-storage S."""
+        self._check(other, "sym_multiply")
+        if not self.upper or other.upper:
+            raise ValueError("sym_multiply: self must be symmetric upper "
+                             "storage and other plain")
+        nid = qt_sym_multiply(self.session.graph, self.params, self.node,
+                              other._materialized(), side=side)
+        return Matrix(self.session, nid, self.params)
+
+    # -- readback (auto-flushes deferred engine waves) ----------------------
+    def to_dense(self) -> np.ndarray:
+        """Dense numpy array (symmetric storage expands to the full
+        matrix); flushes pending Pallas waves first."""
+        d = qt_to_dense(self.session.graph, self.node, self.params)
+        return np.ascontiguousarray(d.T) if self._t else d
+
+    def frob2(self) -> float:
+        """Squared Frobenius norm (transpose-invariant)."""
+        return qt_frob2(self.session.graph, self.node)
+
+    def stats(self) -> dict:
+        """Chunk/occupancy statistics of the quadtree (leaf chunks,
+        internal chunks, nonzero blocks, bytes, depth)."""
+        self.session.flush()
+        return qt_stats(self.session.graph, self.node)
+
+    def nnz_blocks(self) -> int:
+        """Number of nonzero leaf blocks."""
+        return self.stats()["nnz_blocks"]

@@ -1,0 +1,208 @@
+"""Session: one object owning the whole Chunks-and-Tasks machinery.
+
+The paper's matrix library (made explicit in the follow-up "Chunks and
+Tasks Matrix Library 2.0", arXiv:2011.11762) exposes matrices as objects
+whose algebra hides chunk identifiers and task registration.  A
+:class:`Session` is this repo's rendering of that front door: it owns the
+:class:`~repro.core.tasks.CTGraph`, the leaf engine, the runtime
+:class:`~repro.runtime.scheduler.Scheduler` (and through it the
+:class:`~repro.core.chunks.ChunkStore`), the
+:class:`~repro.core.tasks.CostModel` and the chunk placement policy, so a
+paper experiment is a handful of lines::
+
+    from repro import Session
+
+    sess = Session(engine="pallas", placement="parent", leaf_n=64, bs=8)
+    A = sess.from_dense(a)
+    B = sess.from_dense(b)
+    sess.simulate(p=8)                      # build phase places inputs
+    C = A @ B
+    rep = sess.simulate(fresh_stats=True)   # measured multiply phase
+    C.to_dense(), rep.max_bytes_received, rep.crit.length_s
+
+The facade *compiles to* the documented internal layer — the ``qt_*``
+free functions of :mod:`repro.core.quadtree` / :mod:`repro.core.multiply`
+— and adds no graph structure of its own, so the paper's eq (1) task
+counts and the numpy/pallas engine equivalence pin it exactly.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Optional
+
+import numpy as np
+
+from repro.core.quadtree import QTParams, qt_from_coo, qt_from_dense
+from repro.core.tasks import CostModel, CTGraph
+from repro.runtime.scheduler import PLACEMENTS
+
+from .matrix import Matrix
+
+#: accepted spellings of the scheduler placement policies: every canonical
+#: policy name passes through, plus shorthand aliases
+PLACEMENT_ALIASES = {p: p for p in PLACEMENTS}
+PLACEMENT_ALIASES.update({"parent": "parent-worker", "rr": "round-robin"})
+
+
+def _normalize_placement(placement: Optional[str]) -> Optional[str]:
+    if placement is None:
+        return None
+    try:
+        return PLACEMENT_ALIASES[placement]
+    except KeyError:
+        raise ValueError(
+            f"unknown placement {placement!r}; pick one of "
+            f"{sorted(set(PLACEMENT_ALIASES.values()))}") from None
+
+
+class Session:
+    """Owns graph + engine + simulator behind one constructor.
+
+    Parameters
+    ----------
+    engine : ``"numpy"`` (reference, immediate), ``"pallas"`` (deferred,
+        cross-leaf batched kernel waves) or a
+        :class:`~repro.core.engine.LeafEngine` instance.  One stateful
+        engine instance serves one session/graph; rebinding raises
+        :class:`~repro.core.engine.EngineRebindError`.
+    placement : default chunk placement for :meth:`simulate` —
+        ``"parent"``/``"parent-worker"`` (the paper's locality model),
+        ``"round-robin"`` or ``"random"``.
+    leaf_n, bs : quadtree leaf dimension and leaf-internal blocksize used
+        for matrices built by this session (per-matrix overrides via the
+        ``leaf_n=``/``bs=`` kwargs of the constructors).
+    p : default simulated worker count for :meth:`simulate`.
+    cost, cache_bytes, seed, dedup : forwarded to the runtime
+        :class:`~repro.runtime.scheduler.Scheduler` / chunk store
+        (``dedup=True`` enables content-hash chunk deduplication).
+    """
+
+    def __init__(self, engine: Any = "numpy",
+                 placement: str = "parent-worker", leaf_n: int = 64,
+                 bs: int = 8, p: Optional[int] = None,
+                 cost: Optional[CostModel] = None,
+                 cache_bytes: int = 1 << 62, seed: int = 0,
+                 dedup: bool = False):
+        self.graph = CTGraph(engine=engine)
+        self.leaf_n = leaf_n
+        self.bs = bs
+        self.placement = _normalize_placement(placement)
+        self.p = p
+        self.cost = cost
+        self.cache_bytes = cache_bytes
+        self.seed = seed
+        self.dedup = dedup
+        self._sched = None
+        # node id -> materialised-transpose node id, shared by all handles
+        # so a reused lazy .T registers its task program only once
+        self._transpose_cache: dict[int, Optional[int]] = {}
+
+    def __repr__(self) -> str:
+        eng = getattr(self.graph, "_engine_spec", None)
+        eng = getattr(eng, "name", eng) or "numpy"
+        return (f"Session(engine={eng!r}, placement={self.placement!r}, "
+                f"leaf_n={self.leaf_n}, bs={self.bs}, "
+                f"tasks={len(self.graph.nodes)})")
+
+    # -- matrix construction ------------------------------------------------
+    def params_for(self, n: int, leaf_n: Optional[int] = None,
+                   bs: Optional[int] = None) -> QTParams:
+        """The :class:`QTParams` chunk this session uses for dimension n."""
+        return QTParams(n, leaf_n or self.leaf_n, bs or self.bs)
+
+    def from_dense(self, a: np.ndarray, upper: bool = False,
+                   tol: float = 0.0, leaf_n: Optional[int] = None,
+                   bs: Optional[int] = None) -> Matrix:
+        """Build a quadtree matrix from a dense array (task program)."""
+        a = np.asarray(a)
+        params = self.params_for(a.shape[0], leaf_n, bs)
+        nid = qt_from_dense(self.graph, a, params, upper=upper, tol=tol)
+        return Matrix(self, nid, params, upper=upper)
+
+    def from_pattern(self, rows: np.ndarray, cols: np.ndarray, n: int,
+                     value_fn: Optional[Callable] = None,
+                     upper: bool = False, leaf_n: Optional[int] = None,
+                     bs: Optional[int] = None) -> Matrix:
+        """Build from nonzero coordinates without a dense detour
+        (:func:`~repro.core.quadtree.qt_from_coo`)."""
+        params = self.params_for(n, leaf_n, bs)
+        nid = qt_from_coo(self.graph, rows, cols, params,
+                          value_fn=value_fn, upper=upper)
+        return Matrix(self, nid, params, upper=upper)
+
+    def zeros(self, n: int, upper: bool = False,
+              leaf_n: Optional[int] = None, bs: Optional[int] = None
+              ) -> Matrix:
+        """The all-zero (NIL) matrix of dimension n."""
+        return Matrix(self, None, self.params_for(n, leaf_n, bs),
+                      upper=upper)
+
+    # -- execution ----------------------------------------------------------
+    def flush(self) -> None:
+        """Run deferred leaf-engine waves (readback does this for you)."""
+        self.graph.flush()
+
+    @property
+    def scheduler(self):
+        """The session's runtime simulator (created on first use)."""
+        if self._sched is None:
+            from repro.runtime.scheduler import Scheduler
+            self._sched = Scheduler(cost=self.cost,
+                                    cache_bytes=self.cache_bytes,
+                                    seed=self.seed, dedup=self.dedup)
+        return self._sched
+
+    def simulate(self, p: Optional[int] = None,
+                 placement: Optional[str] = None,
+                 fresh_stats: bool = False):
+        """Replay all not-yet-simulated tasks on the virtual cluster.
+
+        The scheduler is persistent across calls (chunk placements from an
+        earlier phase — e.g. the task program that *built* the inputs —
+        carry over, paper §7).  ``fresh_stats=True`` zeroes the per-worker
+        counters first so the returned
+        :class:`~repro.runtime.scheduler.SimReport` isolates this phase's
+        communication.  ``p``/``placement`` default to the session's and
+        are pinned by the first call.
+        """
+        sched = self.scheduler
+        if fresh_stats:
+            sched.reset_stats()
+        placement = _normalize_placement(placement)
+        if sched.store is None:     # first run: session defaults apply
+            p = p or self.p
+            placement = placement or self.placement
+        return sched.run(self.graph, n_workers=p, placement=placement)
+
+    def reset_stats(self) -> None:
+        """Zero per-worker comm counters; placements persist (§7)."""
+        self.scheduler.reset_stats()
+
+    # -- reporting ----------------------------------------------------------
+    def task_counts(self) -> dict[str, int]:
+        """Tasks registered so far, by kind (paper Figs 3-4 inputs)."""
+        return self.graph.count_kinds()
+
+    def tasks_per_level(self) -> dict[int, int]:
+        """Multiplication tasks per quadtree level (eq (1) family)."""
+        from repro.core.multiply import count_tasks_per_level
+        return count_tasks_per_level(self.graph)
+
+    @property
+    def n_multiply_tasks(self) -> int:
+        from repro.core.multiply import total_multiply_tasks
+        return total_multiply_tasks(self.graph)
+
+    @property
+    def n_add_tasks(self) -> int:
+        from repro.core.multiply import total_add_tasks
+        return total_add_tasks(self.graph)
+
+    @property
+    def flops(self) -> float:
+        from repro.core.multiply import total_flops
+        return total_flops(self.graph)
+
+    def engine_stats(self) -> dict:
+        """Leaf-engine report (batched waves, padding, kernel wall time)."""
+        self.flush()
+        return self.graph.engine.stats()

@@ -53,14 +53,38 @@ class WorkerStats:
     peak_owned_bytes: int = 0
     tasks_executed: int = 0
     busy_time: float = 0.0
+    dedup_hits: int = 0               # registrations resolved by content hash
+
+
+def content_fingerprint(obj: Any) -> Any:
+    """Content hash of a chunk, or None when the type opts out of dedup.
+
+    Duck-typed on a ``content_fingerprint()`` method so only chunk types
+    that can vouch for byte-identity (leaf matrix chunks) participate.
+    """
+    fp = getattr(obj, "content_fingerprint", None)
+    return fp() if fp is not None else None
 
 
 class ChunkStore:
-    """All workers' chunks + caches + communication accounting."""
+    """All workers' chunks + caches + communication accounting.
 
-    def __init__(self, n_workers: int, cache_bytes: int = 1 << 62):
+    ``dedup=True`` enables content-hash deduplication: registering data
+    byte-identical to an existing live chunk (e.g. the same dense input
+    built as two quadtrees) returns the *existing* :class:`ChunkId`
+    instead of storing a second copy, shrinking owned-bytes accounting.
+    Deduplicated ids are reference counted so :meth:`free` only deletes
+    the data when the last registration is freed.  Note that with dedup a
+    chunk id may point at a different worker than the one that registered
+    it, so the parent-worker placement invariant (owner == creator) holds
+    only up to content identity.
+    """
+
+    def __init__(self, n_workers: int, cache_bytes: int = 1 << 62,
+                 dedup: bool = False):
         self.n_workers = n_workers
         self.cache_bytes = cache_bytes
+        self.dedup = dedup
         self._data: list[dict[int, Any]] = [dict() for _ in range(n_workers)]
         self._sizes: list[dict[int, int]] = [dict() for _ in range(n_workers)]
         self._next: list[int] = [0] * n_workers
@@ -69,14 +93,45 @@ class ChunkStore:
             OrderedDict() for _ in range(n_workers)]
         self._cache_used: list[int] = [0] * n_workers
         self.stats = [WorkerStats() for _ in range(n_workers)]
+        # dedup bookkeeping: fingerprint <-> (owner, local), refcounts
+        self._by_fp: dict[Any, tuple[int, int]] = {}
+        self._fp_of: dict[tuple[int, int], Any] = {}
+        self._refs: dict[tuple[int, int], int] = {}
 
     # -- registration -----------------------------------------------------
-    def register(self, worker: int, obj: Any, nbytes: int | None = None
-                 ) -> ChunkId:
+    def _dedup_lookup(self, worker: int, obj: Any
+                      ) -> tuple[Optional[ChunkId], Any]:
+        """(existing id, fingerprint) for ``obj`` under dedup; (None, fp)
+        on miss; (None, None) when dedup is off or the type opts out."""
+        if not self.dedup:
+            return None, None
+        fp = content_fingerprint(obj)
+        if fp is None:
+            return None, None
+        key = self._by_fp.get(fp)
+        if key is None:
+            return None, fp
+        self._refs[key] += 1
+        self.stats[worker].dedup_hits += 1
+        return ChunkId(*key), fp
+
+    _FP_UNSET = object()    # sentinel: fingerprint not yet computed
+
+    def register(self, worker: int, obj: Any, nbytes: int | None = None,
+                 _fp: Any = _FP_UNSET) -> ChunkId:
         """Register ``obj`` on ``worker``; returns runtime-chosen id.
 
         No communication: a chunk is owned by the worker that created it.
+        With ``dedup`` enabled, byte-identical data returns the existing id.
+        ``_fp`` carries a fingerprint already computed (and missed) by
+        :meth:`register_pushed` so the block bytes are hashed only once.
         """
+        if _fp is ChunkStore._FP_UNSET:
+            hit, fp = self._dedup_lookup(worker, obj)
+            if hit is not None:
+                return hit
+        else:
+            fp = _fp
         if nbytes is None:
             nbytes = obj.nbytes() if isinstance(obj, Chunk) else _default_nbytes(obj)
         local = self._next[worker]
@@ -86,6 +141,11 @@ class ChunkStore:
         st = self.stats[worker]
         st.owned_bytes += nbytes
         st.peak_owned_bytes = max(st.peak_owned_bytes, st.owned_bytes)
+        if fp is not None:
+            key = (worker, local)
+            self._by_fp[fp] = key
+            self._fp_of[key] = fp
+            self._refs[key] = 1
         return ChunkId(worker, local)
 
     def register_pushed(self, creator: int, owner: int, obj: Any,
@@ -97,10 +157,20 @@ class ChunkStore:
         *sent* there — the owner receives ``nbytes`` over the network.  The
         creator keeps a cached copy (it just produced the data), so its own
         subsequent fetches hit the cache.
+
+        With ``dedup`` enabled, byte-identical data short-circuits to the
+        existing id: nothing is shipped (no push accounting) and the
+        creator — which just produced the same bytes — gets a cache entry.
         """
+        hit, fp = self._dedup_lookup(creator, obj)
+        if hit is not None:
+            if hit.owner != creator:
+                self._cache_insert(creator, (hit.owner, hit.local),
+                                   self._sizes[hit.owner][hit.local])
+            return hit
         if nbytes is None:
             nbytes = obj.nbytes() if isinstance(obj, Chunk) else _default_nbytes(obj)
-        cid = self.register(owner, obj, nbytes)
+        cid = self.register(owner, obj, nbytes, _fp=fp)
         if owner != creator:
             st = self.stats[owner]
             st.bytes_received += nbytes
@@ -139,7 +209,10 @@ class ChunkStore:
     def _cache_insert(self, worker: int, key: tuple[int, int], size: int
                       ) -> None:
         cache = self._cache[worker]
+        if key in cache:                # re-insert: replace, don't double-count
+            self._cache_used[worker] -= cache[key]
         cache[key] = size
+        cache.move_to_end(key)
         self._cache_used[worker] += size
         while self._cache_used[worker] > self.cache_bytes and cache:
             _, evicted = cache.popitem(last=False)
@@ -164,10 +237,18 @@ class ChunkStore:
         """
         if cid is None:
             return
+        key = (cid.owner, cid.local)
+        if key in self._refs:           # dedup'd id: last free wins
+            self._refs[key] -= 1
+            if self._refs[key] > 0:
+                return
+            del self._refs[key]
+            fp = self._fp_of.pop(key)
+            if self._by_fp.get(fp) == key:
+                del self._by_fp[fp]
         size = self._sizes[cid.owner].pop(cid.local)
         del self._data[cid.owner][cid.local]
         self.stats[cid.owner].owned_bytes -= size
-        key = (cid.owner, cid.local)
         for w in range(self.n_workers):
             if key in self._cache[w]:
                 del self._cache[w][key]

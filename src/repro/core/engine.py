@@ -59,13 +59,23 @@ class LeafPayload:
     engine resolves them to chunks at execution time.  Only the fields
     relevant to ``kind`` are meaningful.
     """
-    kind: str                       # multiply|sym_square|syrk|sym_multiply|add
+    kind: str       # multiply|sym_square|syrk|sym_multiply|add|transpose
     a: Optional[int] = None
     b: Optional[int] = None
     ta: bool = False                # multiply: transpose A
     tb: bool = False                # multiply: transpose B
     trans: bool = False             # syrk: A^T A instead of A A^T
     side: str = "left"              # sym_multiply: S B vs B S
+
+
+class EngineRebindError(RuntimeError, ValueError):
+    """A stateful engine instance was bound to a second CTGraph.
+
+    Deferred waves and flop/bytes stats are per-graph state: silently
+    rebinding would flush foreign work as a side effect and conflate the
+    reports.  Subclasses ValueError for backwards compatibility with code
+    that caught the original exception type.
+    """
 
 
 class LeafEngine:
@@ -206,13 +216,16 @@ class NumpyEngine(LeafEngine):
         elif k == "add":
             res = leaf_add(av.leaf, bv.leaf)
             upper = av.upper
+        elif k == "transpose":
+            res = av.leaf.transpose()
+            upper = False
         else:
             raise ValueError(f"unknown leaf payload kind: {k}")
         node.flops = st.flops
         # multiply kinds prune structurally-empty results to NIL; adds of
         # two non-NIL leaves always produce a chunk (Alg 2 semantics) —
         # matching the pallas backend's structural behavior exactly
-        if k != "add" and res.is_zero():
+        if k not in ("add", "transpose") and res.is_zero():
             return None
         return MatrixChunk(av.n, leaf=res, upper=upper)
 
@@ -277,7 +290,7 @@ class PallasEngine(LeafEngine):
         if self._graph is None:
             self._graph = g
         elif g is not self._graph:
-            raise ValueError(
+            raise EngineRebindError(
                 "this PallasEngine instance is already bound to another "
                 "CTGraph; create one engine per graph")
 
@@ -299,6 +312,15 @@ class PallasEngine(LeafEngine):
                 dtype=np.result_type(a_leaf.dtype, b_leaf.dtype))
             self._defer(_Pending(node.nid, payload, out, a_leaf, b_leaf))
             return MatrixChunk(av.n, leaf=out, upper=av.upper)
+
+        if payload.kind == "transpose":
+            # host-side like add; deferred so it orders after the wave that
+            # fills its input (structure is final at registration)
+            out = alloc_structure(a_leaf.n, a_leaf.bs,
+                                  [(j, i) for (i, j) in a_leaf.blocks],
+                                  upper=False, dtype=a_leaf.dtype)
+            self._defer(_Pending(node.nid, payload, out, a_leaf, None))
+            return MatrixChunk(av.n, leaf=out)
 
         pairs, upper = leaf_task_pairs(payload, a_leaf, b_leaf)
         node.flops = 2.0 * len(pairs) * a_leaf.bs ** 3
@@ -384,16 +406,20 @@ class PallasEngine(LeafEngine):
         # kernel failure leaves the deferred work intact and a later flush
         # retries it (block fills are idempotent in-place assignments)
         self._bind(g)
+        host_kinds = ("add", "transpose")
         while self._pending:
-            wave = [t for t in self._pending if t.payload.kind != "add"
-                    and self._ready(t)]
+            wave = [t for t in self._pending
+                    if t.payload.kind not in host_kinds and self._ready(t)]
             if wave:
                 self._run_wave(wave)   # commits per group (see below)
             progressed = bool(wave)
             rest = []
             for t in self._pending:
-                if t.payload.kind == "add" and self._ready(t):
-                    self._run_add(t)
+                if t.payload.kind in host_kinds and self._ready(t):
+                    if t.payload.kind == "add":
+                        self._run_add(t)
+                    else:
+                        self._run_transpose(t)
                     self._unfilled.discard(id(t.out))
                     progressed = True
                 else:
@@ -414,6 +440,11 @@ class PallasEngine(LeafEngine):
                 blk[...] = a
             else:
                 np.add(a, b, out=blk, casting="unsafe")
+
+    @staticmethod
+    def _run_transpose(t: _Pending) -> None:
+        for (i, j), blk in t.a_leaf.blocks.items():
+            t.out.blocks[(j, i)][...] = blk.T
 
     def _run_wave(self, wave: list[_Pending]) -> None:
         groups: dict[int, list[_Pending]] = {}

@@ -5,6 +5,8 @@ Implemented task types (names match the paper):
 * ``multiply``      — C = op(A) op(B), op ∈ {id, transpose}  (Algorithm 1)
 * ``add``           — C = A + B                               (Algorithm 2)
 * ``create``        — creation from submatrix identifiers     (§3.2)
+* ``transpose``     — C = Aᵀ materialised (facade fallback when a lazy
+                      transpose meets an op with no op(A) slot, e.g. add)
 * ``sym_square``    — C = A², A symmetric upper storage       (§3.3)
 * ``syrk``          — C = A Aᵀ or AᵀA, C upper storage        (§3.3)
 * ``sym_multiply``  — C = S B or B S, S symmetric upper       (§3.3)
@@ -120,6 +122,42 @@ def qt_multiply(g: CTGraph, params: QTParams, a: Optional[int],
         return Alias(_register_create(g, av.n, tuple(cids), False, level))
 
     nid = g.register_task("multiply", fn, [Dep(a), Dep(b)])
+    g.nodes[nid].level = level
+    return nid
+
+
+def qt_transpose(g: CTGraph, params: QTParams, a: Optional[int]
+                 ) -> Optional[int]:
+    """C = Aᵀ, materialised.
+
+    Multiplies fold op(A) into the task itself (Algorithm 1's op(A) op(B));
+    this explicit task program exists for the cases with no op slot, e.g.
+    adding a transposed matrix.  Internal levels are identifier shuffling
+    (create-from-ids); leaf transposes are dispatched through the leaf
+    engine as payloads so deferred backends order them after the waves
+    that fill their inputs.  Symmetric upper-storage trees satisfy A = Aᵀ
+    and return the same identifier (no task, no new chunk).
+    """
+    if g.is_nil(a):
+        return None
+    ac: MatrixChunk = g.value_of(a)
+    if ac.upper:
+        return a
+    level = _level_of(params, ac.n)
+
+    if ac.is_leaf:
+        nid = g.register_task("transpose", None, [Dep(a)],
+                              payload=LeafPayload("transpose", a=a))
+        g.nodes[nid].level = level
+        return nid
+
+    def fn(av: MatrixChunk):
+        c00, c01, c10, c11 = av.children
+        cids = (qt_transpose(g, params, c00), qt_transpose(g, params, c10),
+                qt_transpose(g, params, c01), qt_transpose(g, params, c11))
+        return Alias(_register_create(g, av.n, cids, False, level))
+
+    nid = g.register_task("transpose", fn, [Dep(a)])
     g.nodes[nid].level = level
     return nid
 

@@ -70,6 +70,26 @@ class MatrixChunk(Chunk):
             return self.leaf.nbytes()
         return 64  # four identifiers + dimension info
 
+    def content_fingerprint(self) -> Optional[bytes]:
+        """Content hash for :class:`~repro.core.chunks.ChunkStore` dedup.
+
+        Leaf chunks hash their dimensions, storage flags and block bytes;
+        internal chunks opt out (their children are graph-local node ids,
+        so byte-equality across registrations is not meaningful).
+        """
+        if self.leaf is None:
+            return None
+        import hashlib
+
+        lf = self.leaf
+        h = hashlib.sha1()
+        h.update(f"leaf:{self.n}:{lf.bs}:{int(self.upper)}:"
+                 f"{np.dtype(lf.dtype).str}".encode())
+        for key in sorted(lf.blocks):
+            h.update(str(key).encode())
+            h.update(np.ascontiguousarray(lf.blocks[key]).tobytes())
+        return h.digest()
+
 
 # ---------------------------------------------------------------------------
 # Construction task programs

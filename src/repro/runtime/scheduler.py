@@ -77,6 +77,7 @@ class SimReport:
     placement: str = "parent-worker"
     bytes_pushed: list[int] = dataclasses.field(default_factory=list)
     cache_hits: list[int] = dataclasses.field(default_factory=list)
+    dedup_hits: list[int] = dataclasses.field(default_factory=list)
     steal_time_s: float = 0.0
     trace: Optional[Trace] = None
     crit: Optional[CriticalPath] = None
@@ -167,9 +168,11 @@ class Scheduler:
     """
 
     def __init__(self, cost: CostModel | None = None,
-                 cache_bytes: int = 1 << 62, seed: int = 0):
+                 cache_bytes: int = 1 << 62, seed: int = 0,
+                 dedup: bool = False):
         self.cost = cost or CostModel()
         self.cache_bytes = cache_bytes
+        self.dedup = dedup
         self.seed = seed
         self.rng = random.Random(seed)
         self.store: Optional[ChunkStore] = None
@@ -189,7 +192,8 @@ class Scheduler:
                 raise ValueError(
                     f"unknown placement {self.placement_policy!r}; "
                     f"pick one of {PLACEMENTS}")
-            self.store = ChunkStore(self.n_workers, self.cache_bytes)
+            self.store = ChunkStore(self.n_workers, self.cache_bytes,
+                                    dedup=self.dedup)
         else:
             if n_workers is not None and n_workers != self.n_workers:
                 raise ValueError(
@@ -213,6 +217,7 @@ class Scheduler:
             s.cache_hits = 0
             s.tasks_executed = 0
             s.busy_time = 0.0
+            s.dedup_hits = 0
 
     # -- the discrete-event loop -------------------------------------------
     def run(self, g: CTGraph, n_workers: Optional[int] = None,
@@ -334,12 +339,16 @@ class Scheduler:
                 owner = _place(self.placement_policy, w, self._chunk_counter,
                                p, self.rng)
                 self._chunk_counter += 1
+                # charge ship time only for bytes the store actually moved:
+                # a dedup hit resolves to an existing chunk id, no transfer
+                pushed_before = self.store.stats[owner].bytes_pushed
                 cid = self.store.register_pushed(w, owner, node.value,
                                                  node.out_nbytes)
                 self.placement[nid] = cid
-                if owner != w:
-                    pushed_bytes = node.out_nbytes
-                    push_time = node.out_nbytes / self.cost.bandwidth_Bps \
+                shipped = self.store.stats[owner].bytes_pushed - pushed_before
+                if shipped:
+                    pushed_bytes = shipped
+                    push_time = shipped / self.cost.bandwidth_Bps \
                         + self.cost.latency_s
             elif node.alias_of is not None:
                 rn = g.resolve(nid)
@@ -400,6 +409,7 @@ class Scheduler:
             placement=self.placement_policy,
             bytes_pushed=[s.bytes_pushed for s in st],
             cache_hits=[s.cache_hits for s in st],
+            dedup_hits=[s.dedup_hits for s in st],
             steal_time_s=steal_time,
             trace=trace,
             crit=crit,

@@ -1,0 +1,437 @@
+"""Session/Matrix facade: the operator API compiles to the qt_* layer.
+
+Pins the api_redesign three ways: (1) the facade registers the *identical*
+task graph as the direct free-function layer (eq (1) counts, kinds, flops,
+simulated schedule); (2) operator algebra (lazy ``.T``, ``@``/``+``
+routing, symmetric ops, NIL operands) matches dense numpy under both leaf
+engines; (3) the satellite contracts — engine-rebind enforcement and
+content-hash chunk dedup — hold.
+"""
+import numpy as np
+import pytest
+
+from _hyp import given, settings, st
+
+from repro import Matrix, Session
+from repro.core.engine import EngineRebindError, PallasEngine
+from repro.core.multiply import (count_tasks_per_level, qt_multiply,
+                                 total_flops, total_multiply_tasks)
+from repro.core.patterns import (banded_mask, divide_space_order,
+                                 overlap_mask, particle_cloud, random_mask,
+                                 random_symmetric_mask, values_for_mask)
+from repro.core.quadtree import QTParams, qt_from_dense
+from repro.core.tasks import CTGraph
+from repro.core.chunks import ChunkStore
+from repro.core.quadtree import MatrixChunk
+from repro.core.leaf import LeafMatrix
+from repro.runtime.scheduler import Scheduler
+
+N, LEAF_N, BS = 64, 16, 4
+TOL = dict(atol=1e-4, rtol=1e-4)   # pallas packs float32; numpy is float64
+
+
+def _session(engine="numpy", **kw):
+    kw.setdefault("leaf_n", LEAF_N)
+    kw.setdefault("bs", BS)
+    return Session(engine=engine, **kw)
+
+
+def _s2_mask(n=N):
+    coords = particle_cloud(4, 3, seed=7)          # 64 basis functions
+    order = divide_space_order(coords)
+    return overlap_mask(coords, 4.0, order=order)
+
+
+PATTERNS = {
+    "random": lambda: random_mask(N, 0.12, seed=3),
+    "banded": lambda: banded_mask(N, 6),
+    "s2": _s2_mask,
+    "nil": lambda: np.zeros((N, N), dtype=bool),
+}
+
+
+class TestFacadeCompilesToInternalLayer:
+    """No behavior change: the facade registers the exact same graph."""
+
+    def _inputs(self):
+        a = values_for_mask(banded_mask(N, 5), seed=1)
+        b = values_for_mask(random_mask(N, 0.15, seed=2), seed=2)
+        return a, b
+
+    def test_graph_identical_to_direct_qt_calls(self):
+        a, b = self._inputs()
+        params = QTParams(N, LEAF_N, BS)
+        g = CTGraph()
+        ra = qt_from_dense(g, a, params)
+        rb = qt_from_dense(g, b, params)
+        qt_multiply(g, params, ra, rb)
+
+        sess = _session()
+        _ = sess.from_dense(a) @ sess.from_dense(b)
+
+        assert sess.task_counts() == g.count_kinds()
+        assert sess.tasks_per_level() == count_tasks_per_level(g)
+        assert sess.n_multiply_tasks == total_multiply_tasks(g)
+        assert sess.flops == pytest.approx(total_flops(g))
+
+    def test_simulated_schedule_identical_to_direct(self):
+        """Same registration order + same seed => identical replay."""
+        a, _ = self._inputs()
+        params = QTParams(N, LEAF_N, BS)
+        g = CTGraph()
+        sched = Scheduler(seed=0)
+        ra = qt_from_dense(g, a, params)
+        rb = qt_from_dense(g, a, params)
+        sched.run(g, n_workers=4, placement="parent-worker")
+        sched.reset_stats()
+        qt_multiply(g, params, ra, rb)
+        want = sched.run(g)
+
+        sess = _session(p=4, seed=0)
+        A, B = sess.from_dense(a), sess.from_dense(a)
+        sess.simulate()
+        _ = A @ B
+        got = sess.simulate(fresh_stats=True)
+
+        assert got.bytes_received == want.bytes_received
+        assert got.makespan == pytest.approx(want.makespan)
+        assert got.steals == want.steals
+        assert got.tasks_per_worker == want.tasks_per_worker
+
+    def test_placement_aliases(self):
+        sess = _session(placement="parent")
+        assert sess.placement == "parent-worker"
+        with pytest.raises(ValueError, match="unknown placement"):
+            _session(placement="summa")
+
+    def test_simulate_override_pins_config(self):
+        """First-call p/placement overrides are pinned: later bare
+        simulate() calls reuse them instead of the session defaults."""
+        a = values_for_mask(banded_mask(N, 4), seed=1)
+        sess = _session()                       # defaults: p=None, parent
+        A = sess.from_dense(a)
+        rep = sess.simulate(p=4, placement="random")
+        assert rep.n_workers == 4 and rep.placement == "random"
+        _ = A @ A
+        rep2 = sess.simulate(fresh_stats=True)  # bare: reuse pinned config
+        assert rep2.n_workers == 4 and rep2.placement == "random"
+        with pytest.raises(ValueError, match="cannot re-run"):
+            sess.simulate(p=8)
+
+    def test_top_level_package_exports(self):
+        import repro
+        assert repro.Session is Session and repro.Matrix is Matrix
+        assert repro.core.patterns.banded_mask is banded_mask
+        assert hasattr(repro.runtime, "scheduler")
+        with pytest.raises(AttributeError):
+            repro.nonsense
+
+
+class TestOperatorAlgebra:
+    """Operator semantics against dense numpy (numpy engine)."""
+
+    def setup_method(self):
+        self.sess = _session()
+        self.a = values_for_mask(banded_mask(N, 5), seed=1)
+        self.b = values_for_mask(random_mask(N, 0.15, seed=2), seed=2)
+        self.c = values_for_mask(random_mask(N, 0.1, seed=3), seed=3)
+        self.A = self.sess.from_dense(self.a)
+        self.B = self.sess.from_dense(self.b)
+        self.C = self.sess.from_dense(self.c)
+
+    def test_matmul_add(self):
+        np.testing.assert_allclose((self.A @ self.B).to_dense(),
+                                   self.a @ self.b, atol=1e-10)
+        np.testing.assert_allclose((self.A + self.B).to_dense(),
+                                   self.a + self.b, atol=1e-12)
+
+    def test_lazy_transpose_folds_into_multiply(self):
+        before = self.sess.task_counts()
+        At = self.A.T
+        assert self.sess.task_counts() == before      # no task registered
+        np.testing.assert_allclose((At @ self.B).to_dense(),
+                                   self.a.T @ self.b, atol=1e-10)
+        np.testing.assert_allclose((self.A @ self.B.T).to_dense(),
+                                   self.a @ self.b.T, atol=1e-10)
+        # op(A) op(B) folding: still no transpose tasks in the graph
+        assert "transpose" not in self.sess.task_counts()
+        assert At.T.node == self.A.node and not At.T._t
+
+    def test_transpose_materializes_for_add(self):
+        got = (self.A.T + self.B).to_dense()
+        np.testing.assert_allclose(got, self.a.T + self.b, atol=1e-12)
+        assert self.sess.task_counts()["transpose"] > 0
+
+    def test_transpose_materialization_cached(self):
+        """Reusing a lazy .T handle registers the transpose program once."""
+        _ = self.A.T + self.B
+        n_transpose = self.sess.task_counts()["transpose"]
+        _ = self.A.T + self.C        # same source node, fresh .T handle
+        assert self.sess.task_counts()["transpose"] == n_transpose
+        np.testing.assert_allclose((self.A.T + self.C).to_dense(),
+                                   self.a.T + self.c, atol=1e-12)
+
+    def test_mixed_chain(self):
+        got = ((self.A @ self.B).T + self.C).to_dense()
+        np.testing.assert_allclose(got, (self.a @ self.b).T + self.c,
+                                   atol=1e-10)
+
+    def test_readback_of_lazy_transpose(self):
+        np.testing.assert_allclose(self.A.T.to_dense(), self.a.T,
+                                   atol=1e-15)
+        assert self.A.T.frob2() == pytest.approx(self.A.frob2())
+        assert self.A.T.nnz_blocks() == self.A.nnz_blocks()
+
+    def test_syrk(self):
+        np.testing.assert_allclose(self.A.syrk().to_dense(),
+                                   self.a @ self.a.T, atol=1e-10)
+        np.testing.assert_allclose(self.A.syrk(trans=True).to_dense(),
+                                   self.a.T @ self.a, atol=1e-10)
+        # lazy .T folds into the trans flag
+        np.testing.assert_allclose(self.A.T.syrk().to_dense(),
+                                   self.a.T @ self.a, atol=1e-10)
+
+    def test_symmetric_ops(self):
+        s = values_for_mask(random_symmetric_mask(N, 0.1, seed=13),
+                            seed=13, symmetric=True)
+        S = self.sess.from_dense(s, upper=True)
+        assert S.T is S                                # A == A^T
+        np.testing.assert_allclose(S.sym_square().to_dense(), s @ s,
+                                   atol=1e-10)
+        np.testing.assert_allclose((S @ self.B).to_dense(), s @ self.b,
+                                   atol=1e-10)          # sym_multiply left
+        np.testing.assert_allclose((self.B @ S).to_dense(), self.b @ s,
+                                   atol=1e-10)          # sym_multiply right
+        np.testing.assert_allclose(
+            S.sym_multiply(self.B, side="right").to_dense(), self.b @ s,
+            atol=1e-10)
+
+    def test_errors(self):
+        s = values_for_mask(random_symmetric_mask(N, 0.1, seed=14),
+                            seed=14, symmetric=True)
+        S = self.sess.from_dense(s, upper=True)
+        S2 = self.sess.from_dense(s, upper=True)
+        with pytest.raises(ValueError, match="symmetric upper storage"):
+            _ = S @ S2
+        with pytest.raises(ValueError, match="cannot mix"):
+            _ = S + self.A
+        with pytest.raises(ValueError, match="upper storage"):
+            self.A.sym_square()
+        with pytest.raises(ValueError, match="sym_square"):
+            S.syrk()
+        other = _session()
+        X = other.from_dense(self.a)
+        with pytest.raises(ValueError, match="different Sessions"):
+            _ = self.A @ X
+        with pytest.raises(TypeError):
+            _ = self.A @ self.a
+
+    def test_nil_matrices(self):
+        Z = self.sess.zeros(N)
+        assert Z.is_nil and Z.T.is_nil
+        assert (Z @ self.A).is_nil and (self.A @ Z).is_nil
+        np.testing.assert_allclose((Z + self.A).to_dense(), self.a,
+                                   atol=1e-15)
+        np.testing.assert_allclose(Z.to_dense(), np.zeros((N, N)))
+        assert Z.frob2() == 0.0 and Z.nnz_blocks() == 0
+
+    def test_from_dense_classmethod_and_stats(self):
+        A = Matrix.from_dense(self.sess, self.a)
+        assert A.n == N and not A.is_nil
+        st = A.stats()
+        assert st["nnz_blocks"] == A.nnz_blocks() > 0
+        assert st["leaf_chunks"] > 0
+
+
+@pytest.mark.pallas
+class TestEngineEquivalenceThroughFacade:
+    """engine="numpy" vs engine="pallas" sessions agree on expression
+    chains over the paper's pattern families, including all-NIL."""
+
+    @pytest.mark.parametrize("pattern", sorted(PATTERNS))
+    def test_mixed_chain(self, pattern):
+        a = values_for_mask(PATTERNS[pattern](), seed=1)
+        b = values_for_mask(banded_mask(N, 4), seed=2)
+        c = values_for_mask(random_mask(N, 0.1, seed=3), seed=3)
+        outs = {}
+        for engine in ("numpy", "pallas"):
+            sess = _session(engine=engine)
+            A, B, C = (sess.from_dense(x) for x in (a, b, c))
+            outs[engine] = ((A @ B).T + C).to_dense()
+        np.testing.assert_allclose(outs["pallas"], outs["numpy"], **TOL)
+        np.testing.assert_allclose(outs["numpy"], (a @ b).T + c,
+                                   atol=1e-10)
+
+    def test_deep_chain_orders_deferred_transpose(self):
+        """((A @ B) @ C).T + D: the transposed leaf sits between two
+        deferred waves — the engine must order its fill correctly."""
+        a = values_for_mask(banded_mask(N, 5), seed=1)
+        b = values_for_mask(random_mask(N, 0.15, seed=2), seed=2)
+        c = values_for_mask(random_mask(N, 0.12, seed=3), seed=3)
+        d = values_for_mask(banded_mask(N, 3), seed=4)
+        want = ((a @ b) @ c).T + d
+        for engine in ("numpy", "pallas"):
+            sess = _session(engine=engine)
+            A, B, C, D = (sess.from_dense(x) for x in (a, b, c, d))
+            got = (((A @ B) @ C).T + D).to_dense()
+            np.testing.assert_allclose(got, want, atol=1e-3, rtol=1e-3)
+
+    def test_sym_square_equivalence(self):
+        mask = _s2_mask()
+        s = values_for_mask(mask | mask.T, seed=11, symmetric=True)
+        outs = {}
+        for engine in ("numpy", "pallas"):
+            sess = _session(engine=engine)
+            outs[engine] = sess.from_dense(
+                s, upper=True).sym_square().to_dense()
+        np.testing.assert_allclose(outs["pallas"], outs["numpy"], **TOL)
+        np.testing.assert_allclose(outs["numpy"], s @ s, atol=1e-10)
+
+
+@pytest.mark.pallas
+@settings(max_examples=6, deadline=None)
+@given(seed=st.integers(0, 1000),
+       pattern=st.sampled_from(sorted(PATTERNS)))
+def test_property_mixed_chain_engine_equivalence(seed, pattern):
+    """((A @ B).T + C) agrees across engines for random operand draws,
+    with A drawn from the pattern families including all-NIL."""
+    a = values_for_mask(PATTERNS[pattern](), seed=seed)
+    b = values_for_mask(random_mask(N, 0.1 + (seed % 3) * 0.1,
+                                    seed=seed + 1), seed=seed + 1)
+    c = values_for_mask(banded_mask(N, 2 + seed % 7), seed=seed + 2)
+    outs = {}
+    for engine in ("numpy", "pallas"):
+        sess = _session(engine=engine)
+        A, B, C = (sess.from_dense(x) for x in (a, b, c))
+        outs[engine] = ((A @ B).T + C).to_dense()
+    np.testing.assert_allclose(outs["pallas"], outs["numpy"], **TOL)
+    np.testing.assert_allclose(outs["numpy"], (a @ b).T + c, atol=1e-10)
+
+
+@pytest.mark.pallas
+class TestEngineRebindEnforced:
+    """Satellite: one stateful engine instance per CTGraph, enforced."""
+
+    def test_rebind_raises_runtime_error(self):
+        a = values_for_mask(banded_mask(N, 3), seed=34)
+        e = PallasEngine()
+        s1 = _session(engine=e)
+        A = s1.from_dense(a)
+        _ = A @ A
+        s2 = _session(engine=e)
+        B = s2.from_dense(a)
+        with pytest.raises(RuntimeError, match="one engine per graph"):
+            _ = B @ B
+
+    def test_rebind_error_type(self):
+        assert issubclass(EngineRebindError, RuntimeError)
+        assert issubclass(EngineRebindError, ValueError)  # compat
+
+    def test_flush_of_foreign_graph_rejected(self):
+        e = PallasEngine()
+        g1 = CTGraph(engine=e)
+        e.flush(g1)     # binds
+        g2 = CTGraph()
+        with pytest.raises(RuntimeError, match="one engine per graph"):
+            e.flush(g2)
+
+
+def _leaf_chunk(a, bs=BS):
+    return MatrixChunk(a.shape[0], leaf=LeafMatrix.from_dense(a, bs))
+
+
+class TestChunkDedup:
+    """Satellite: content-hash dedup at chunk registration."""
+
+    def test_identical_data_returns_existing_id(self):
+        a = values_for_mask(banded_mask(16, 3), seed=5)
+        st_ = ChunkStore(2, dedup=True)
+        c1 = st_.register(0, _leaf_chunk(a))
+        c2 = st_.register(1, _leaf_chunk(a.copy()))     # byte-identical
+        assert c1 == c2
+        assert st_.stats[1].dedup_hits == 1
+        assert st_.stats[1].owned_bytes == 0            # stored once, on w0
+        c3 = st_.register(1, _leaf_chunk(a + 1.0))      # different bytes
+        assert c3 != c1 and st_.stats[1].owned_bytes > 0
+
+    def test_dedup_off_by_default(self):
+        a = values_for_mask(banded_mask(16, 3), seed=5)
+        st_ = ChunkStore(2)
+        assert st_.register(0, _leaf_chunk(a)) != \
+            st_.register(1, _leaf_chunk(a.copy()))
+
+    def test_register_pushed_dedup_skips_push_comm(self):
+        a = values_for_mask(banded_mask(16, 3), seed=6)
+        st_ = ChunkStore(3, dedup=True)
+        c1 = st_.register(0, _leaf_chunk(a))
+        c2 = st_.register_pushed(1, 2, _leaf_chunk(a.copy()))
+        assert c2 == c1
+        assert st_.stats[2].bytes_received == 0         # nothing shipped
+        assert st_.stats[2].bytes_pushed == 0
+        # the creator just produced the bytes: its fetch is a cache hit
+        st_.fetch(1, c1)
+        assert st_.stats[1].bytes_received == 0
+        assert st_.stats[1].cache_hits == 1
+
+    def test_repeated_dedup_hits_do_not_inflate_cache_accounting(self):
+        """Re-inserting an existing cache key (repeated dedup hits by the
+        same creator) must not double-count _cache_used."""
+        a = values_for_mask(banded_mask(16, 3), seed=8)
+        st_ = ChunkStore(3, dedup=True, cache_bytes=10_000)
+        cid = st_.register_pushed(1, 2, _leaf_chunk(a))     # fresh, pushed
+        size = st_.cache_used(1)
+        assert size > 0
+        for _ in range(3):                                  # dedup hits
+            assert st_.register_pushed(1, 0, _leaf_chunk(a.copy())) == cid
+        assert st_.cache_used(1) == size                    # not inflated
+        st_.fetch(1, cid)
+        assert st_.stats[1].cache_hits == 1                 # entry is live
+
+    def test_free_is_refcounted(self):
+        a = values_for_mask(banded_mask(16, 3), seed=7)
+        st_ = ChunkStore(1, dedup=True)
+        c1 = st_.register(0, _leaf_chunk(a))
+        st_.register(0, _leaf_chunk(a.copy()))          # refcount -> 2
+        nbytes = st_.stats[0].owned_bytes
+        st_.free(c1)
+        assert st_.stats[0].owned_bytes == nbytes       # still referenced
+        st_.free(c1)
+        assert st_.stats[0].owned_bytes == 0
+        # fingerprint slot released: re-registration stores fresh data
+        c2 = st_.register(0, _leaf_chunk(a.copy()))
+        assert st_.stats[0].owned_bytes == nbytes and c2 != c1
+
+    def test_session_dedup_shrinks_owned_bytes(self):
+        """simulate_runtime's shape: the same dense input built as two
+        quadtrees is stored once under Session(dedup=True)."""
+        a = values_for_mask(banded_mask(128, 6), seed=1, symmetric=True)
+        owned, build_reps, mult_reps = {}, {}, {}
+        for dedup in (False, True):
+            sess = Session(leaf_n=32, bs=8, p=4, seed=0, dedup=dedup)
+            A, B = sess.from_dense(a), sess.from_dense(a)
+            build_reps[dedup] = sess.simulate()
+            C = A @ B
+            mult_reps[dedup] = sess.simulate(fresh_stats=True)
+            np.testing.assert_allclose(C.to_dense(), a @ a, atol=1e-12)
+            owned[dedup] = sum(s.owned_bytes
+                               for s in sess.scheduler.store.stats)
+        # every duplicated input leaf resolved to the existing chunk ...
+        assert sum(build_reps[True].dedup_hits) > 0
+        assert sum(build_reps[False].dedup_hits) == 0
+        # ... shrinking owned-bytes accounting
+        assert owned[True] < owned[False]
+        saved = owned[False] - owned[True]
+        assert sum(mult_reps[True].peak_owned) <= \
+            sum(mult_reps[False].peak_owned) - saved // 2
+
+    def test_dedup_hit_not_charged_as_push(self):
+        """A dedup'd registration ships nothing: the wall-clock model and
+        trace must agree with the store's push accounting."""
+        a = values_for_mask(banded_mask(128, 6), seed=1, symmetric=True)
+        sess = Session(leaf_n=32, bs=8, p=4, seed=0, dedup=True,
+                       placement="random")
+        A, B = sess.from_dense(a), sess.from_dense(a)
+        rep = sess.simulate()
+        assert sum(rep.dedup_hits) > 0
+        traced = sum(ev.pushed_bytes for ev in rep.trace.events)
+        assert traced == sum(rep.bytes_pushed)
