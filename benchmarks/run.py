@@ -30,11 +30,15 @@ BENCHES = [
      "Figs 10-11: S^2 on 3-D overlap matrices"),
     ("bench_tpu_comm", [],
      "Fig 14: HLO collective bytes, halo vs SpSUMMA"),
+    ("bench_truncation", ["--out", "BENCH_truncation.json"],
+     "SpAMM truncated multiply: flops/comm-vs-error tau sweep"),
 ]
 
 QUICK = [
     ("bench_comm_scaling", ["--quick", "--out", "BENCH_comm_scaling.json"],
      "quick runtime-simulator comm sweep (perf trajectory)"),
+    ("bench_truncation", ["--quick", "--out", "BENCH_truncation.json"],
+     "quick truncated-multiply tau sweep (error-vs-cost trajectory)"),
 ]
 
 

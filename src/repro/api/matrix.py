@@ -29,23 +29,27 @@ from typing import Optional
 
 import numpy as np
 
-from repro.core.multiply import (qt_add, qt_multiply, qt_sym_multiply,
-                                 qt_sym_square, qt_syrk, qt_transpose)
-from repro.core.quadtree import QTParams, qt_frob2, qt_stats, qt_to_dense
+from repro.core.multiply import (TruncationReport, qt_add, qt_multiply,
+                                 qt_sym_multiply, qt_sym_square, qt_syrk,
+                                 qt_transpose)
+from repro.core.quadtree import (QTParams, qt_frob2, qt_norm2, qt_stats,
+                                 qt_to_dense)
 
 
 class Matrix:
     """Handle to a quadtree matrix registered in a session's task graph."""
 
-    __slots__ = ("session", "node", "params", "_t", "upper")
+    __slots__ = ("session", "node", "params", "_t", "upper", "_trunc")
 
     def __init__(self, session, node: Optional[int], params: QTParams,
-                 t: bool = False, upper: bool = False):
+                 t: bool = False, upper: bool = False,
+                 trunc: Optional[TruncationReport] = None):
         self.session = session
         self.node = node            # root chunk's node id; None == NIL
         self.params = params
         self._t = t and not upper   # symmetric storage: A == Aᵀ
         self.upper = upper
+        self._trunc = trunc         # TruncationReport of the producing multiply
 
     # -- construction (delegates to the session) ----------------------------
     @classmethod
@@ -105,30 +109,63 @@ class Matrix:
         folded into the next multiply (Algorithm 1's op(A) op(B))."""
         if self.upper:
             return self             # symmetric: A == Aᵀ
-        return Matrix(self.session, self.node, self.params, t=not self._t)
+        return Matrix(self.session, self.node, self.params, t=not self._t,
+                      trunc=self._trunc)
 
     def transpose(self) -> "Matrix":
         return self.T
 
     def __matmul__(self, other: "Matrix") -> "Matrix":
+        """C = A B; a ``Session(tau=...)`` default makes this the
+        error-controlled truncated multiply (see :meth:`multiply`)."""
+        return self.multiply(other)
+
+    def multiply(self, other: "Matrix", tau: Optional[float] = None
+                 ) -> "Matrix":
+        """C = op(A) op(B) with SpAMM-style hierarchical norm truncation.
+
+        ``tau`` (default: the session's ``tau``) prunes every recursive
+        product — at any quadtree level and within leaf block pairs —
+        whose Frobenius-norm product is below it.  The result carries a
+        :class:`~repro.core.multiply.TruncationReport`; read the
+        worst-case ``||C_exact - C_tau||_F`` bound via
+        :attr:`error_bound`.  ``tau=0`` registers a task graph identical
+        to the exact multiply.  Truncation applies to plain operands;
+        symmetric upper-storage operands route to ``sym_multiply``
+        untruncated (an explicit ``tau > 0`` then raises).
+        """
         self._check(other, "@")
         g, p = self.session.graph, self.params
+        explicit = tau is not None
+        tau = float(self.session.tau if tau is None else tau)
         if self.upper and other.upper:
             raise ValueError(
                 "@: both operands use symmetric upper storage; the library "
                 "multiplies symmetric x plain (qt_sym_multiply). Rebuild "
                 "one operand without upper=True")
-        if self.upper:      # C = S B
-            nid = qt_sym_multiply(g, p, self.node, other._materialized(),
-                                  side="left")
+        if self.upper or other.upper:
+            if explicit and tau > 0.0:
+                raise ValueError(
+                    "multiply(tau=...): truncation needs plain (non-upper) "
+                    "operands; sym_multiply is untruncated")
+            # a session-default tau routes silently to the untruncated
+            # symmetric task program
+            if self.upper:      # C = S B
+                nid = qt_sym_multiply(g, p, self.node,
+                                      other._materialized(), side="left")
+            else:               # C = B S
+                nid = qt_sym_multiply(g, p, other.node,
+                                      self._materialized(), side="right")
             return Matrix(self.session, nid, p)
-        if other.upper:     # C = B S
-            nid = qt_sym_multiply(g, p, other.node, self._materialized(),
-                                  side="right")
-            return Matrix(self.session, nid, p)
-        nid = qt_multiply(g, p, self.node, other.node,
-                          ta=self._t, tb=other._t)
-        return Matrix(self.session, nid, p)
+        rep = TruncationReport(tau=tau)
+        if tau > 0.0:
+            nid = qt_multiply(g, p, self.node, other.node,
+                              ta=self._t, tb=other._t, tau=tau, trunc=rep)
+        else:
+            # tau == 0: exact path, byte-for-byte the same registrations
+            nid = qt_multiply(g, p, self.node, other.node,
+                              ta=self._t, tb=other._t)
+        return Matrix(self.session, nid, p, trunc=rep)
 
     def __add__(self, other: "Matrix") -> "Matrix":
         self._check(other, "+")
@@ -182,6 +219,24 @@ class Matrix:
     def frob2(self) -> float:
         """Squared Frobenius norm (transpose-invariant)."""
         return qt_frob2(self.session.graph, self.node)
+
+    def norm2(self) -> float:
+        """Cached squared Frobenius norm (the SpAMM pruning quantity);
+        numerically identical to :meth:`frob2`."""
+        return qt_norm2(self.session.graph, self.node)
+
+    # -- truncation readback --------------------------------------------------
+    @property
+    def truncation(self) -> Optional[TruncationReport]:
+        """The :class:`~repro.core.multiply.TruncationReport` of the
+        multiply that produced this matrix, or None for other origins."""
+        return self._trunc
+
+    @property
+    def error_bound(self) -> float:
+        """Worst-case ``||C_exact - C_tau||_F`` of the producing truncated
+        multiply; 0.0 for exact results (tau=0 prunes nothing)."""
+        return self._trunc.error_bound if self._trunc is not None else 0.0
 
     def stats(self) -> dict:
         """Chunk/occupancy statistics of the quadtree (leaf chunks,

@@ -71,6 +71,12 @@ class Session:
         for matrices built by this session (per-matrix overrides via the
         ``leaf_n=``/``bs=`` kwargs of the constructors).
     p : default simulated worker count for :meth:`simulate`.
+    tau : default SpAMM truncation threshold for ``A @ B`` /
+        :meth:`Matrix.multiply` on plain operands (DESIGN.md §5).  The
+        default 0.0 multiplies exactly; a positive tau prunes every
+        recursive product with ``||A'||_F ||B'||_F < tau`` and records a
+        worst-case error bound on the result
+        (:attr:`~repro.api.matrix.Matrix.error_bound`).
     cost, cache_bytes, seed, dedup : forwarded to the runtime
         :class:`~repro.runtime.scheduler.Scheduler` / chunk store
         (``dedup=True`` enables content-hash chunk deduplication).
@@ -81,7 +87,7 @@ class Session:
                  bs: int = 8, p: Optional[int] = None,
                  cost: Optional[CostModel] = None,
                  cache_bytes: int = 1 << 62, seed: int = 0,
-                 dedup: bool = False):
+                 dedup: bool = False, tau: float = 0.0):
         self.graph = CTGraph(engine=engine)
         self.leaf_n = leaf_n
         self.bs = bs
@@ -91,6 +97,7 @@ class Session:
         self.cache_bytes = cache_bytes
         self.seed = seed
         self.dedup = dedup
+        self.tau = float(tau)
         self._sched = None
         # node id -> materialised-transpose node id, shared by all handles
         # so a reused lazy .T registers its task program only once

@@ -176,6 +176,72 @@ def avg_parallelism(work_s: float, critical_path_s: float) -> float:
     return work_s / critical_path_s if critical_path_s > 0 else 0.0
 
 
+def truncation_summary(exact, truncated) -> dict:
+    """Reduction won by a truncated multiply, from two simulator phases.
+
+    ``exact``/``truncated`` are :class:`~repro.runtime.scheduler.SimReport`
+    objects (or anything duck-typed alike) of the exact and the tau-pruned
+    multiply phase over the same inputs.  Ratios are truncated/exact:
+    below 1.0 means the pruning visibly shrank the quantity (tasks,
+    fetched bytes, executed flops, critical path, makespan).
+    """
+    def ratio(t, e):
+        return float(t) / float(e) if e else 1.0
+
+    ex_bytes = sum(exact.bytes_received)
+    tr_bytes = sum(truncated.bytes_received)
+    out = {
+        "task_ratio": ratio(truncated.n_tasks, exact.n_tasks),
+        "bytes_ratio": ratio(tr_bytes, ex_bytes),
+        "flops_ratio": ratio(truncated.total_flops, exact.total_flops),
+        "makespan_ratio": ratio(truncated.makespan, exact.makespan),
+        "n_tasks": (exact.n_tasks, truncated.n_tasks),
+        "bytes_received": (ex_bytes, tr_bytes),
+        "total_flops": (exact.total_flops, truncated.total_flops),
+    }
+    if exact.crit is not None and truncated.crit is not None:
+        out["critical_path_ratio"] = ratio(truncated.crit.length_s,
+                                           exact.crit.length_s)
+    return out
+
+
+def task_comm_demand(g, start: int = 0) -> int:
+    """Fetched-dependency data volume of ``g.nodes[start:]`` in bytes.
+
+    For every task registered at or after ``start``, sums the chunk sizes
+    of its content-fetched dependencies (identifier-only deps move no
+    data).  This is the communication *demand* the scheduler replays —
+    what a cache-less cluster would receive — and unlike one stochastic
+    work-stealing replay it is a pure graph quantity: truncation prunes
+    tasks and shrinks result chunks, so demand decreases monotonically
+    in tau.  Pass ``start`` = the node count before a phase to isolate
+    that phase (e.g. the multiply registered after the build).
+    """
+    total = 0
+    for n in g.nodes[start:]:
+        for d in n.deps:
+            if not d.fetch:
+                continue
+            dn = g.resolve(d.nid)
+            if dn is not None:
+                total += g.nodes[dn].out_nbytes
+    return total
+
+
+def is_monotone_nonincreasing(values, rtol: float = 0.0) -> bool:
+    """True iff the series never grows by more than ``rtol`` relative.
+
+    Used by the truncation benchmark: flops/tasks must be exactly
+    non-increasing in tau (rtol=0); simulated communication is allowed a
+    small scheduler-noise tolerance.
+    """
+    vals = [float(v) for v in values]
+    for lo, hi in zip(vals, vals[1:]):
+        if hi > lo * (1.0 + rtol) + 1e-12:
+            return False
+    return True
+
+
 def critical_path_summary(work_s: float, critical_path_s: float,
                           p: int, makespan_s: float) -> dict:
     """Eq (13)/(14)-style decomposition of one simulated phase."""

@@ -43,15 +43,11 @@ def _default_gemm(a: jax.Array, b: jax.Array) -> jax.Array:
     return kops.batched_gemm(a, b)
 
 
-def compute_c_structure(mask_a: jax.Array, mask_b: jax.Array, cap_c: int
-                        ) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
-    """Occupancy of C = A @ B: rows, cols, slot map, count (jit-compatible).
-
-    The boolean matmul is the one-shot equivalent of the create-from-ids
-    task tree: it tells us which C blocks exist before any flop is spent.
-    """
-    g = mask_a.shape[0]
-    mc = (jnp.matmul(mask_a.astype(jnp.int32), mask_b.astype(jnp.int32)) > 0)
+def _structure_from_occupancy(mc: jax.Array, cap_c: int
+                              ) -> tuple[jax.Array, jax.Array, jax.Array,
+                                         jax.Array]:
+    """Row-major slot numbering of an occupancy matrix (shared helper)."""
+    g = mc.shape[0]
     crows, ccols = jnp.nonzero(mc, size=cap_c, fill_value=g)
     crows = crows.astype(jnp.int32)
     ccols = ccols.astype(jnp.int32)
@@ -61,6 +57,40 @@ def compute_c_structure(mask_a: jax.Array, mask_b: jax.Array, cap_c: int
         jnp.where(valid, jnp.arange(cap_c, dtype=jnp.int32), -1))
     cslot = cslot.at[g, :].set(-1).at[:, g].set(-1)
     return crows, ccols, cslot, jnp.sum(mc).astype(jnp.int32)
+
+
+def compute_c_structure(mask_a: jax.Array, mask_b: jax.Array, cap_c: int
+                        ) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Occupancy of C = A @ B: rows, cols, slot map, count (jit-compatible).
+
+    The boolean matmul is the one-shot equivalent of the create-from-ids
+    task tree: it tells us which C blocks exist before any flop is spent.
+    """
+    mc = (jnp.matmul(mask_a.astype(jnp.int32), mask_b.astype(jnp.int32)) > 0)
+    return _structure_from_occupancy(mc, cap_c)
+
+
+def compute_c_structure_norms(norm_a: jax.Array, norm_b: jax.Array,
+                              tau: float, cap_c: int
+                              ) -> tuple[jax.Array, jax.Array, jax.Array,
+                                         jax.Array]:
+    """Norm-weighted occupancy of C = A @ B under SpAMM truncation.
+
+    ``norm_a[i, k]`` / ``norm_b[k, j]`` are per-block Frobenius norms
+    (0 for structurally absent blocks).  Block C[i, j] survives iff some
+    inner index k satisfies ``norm_a[i, k] * norm_b[k, j] >= tau`` — a
+    max-times ("tropical") matmul replacing the boolean one, evaluated
+    as one einsum-free broadcast so it stays jit-compatible.  ``tau <= 0``
+    delegates to the exact :func:`compute_c_structure` on the nonzero
+    masks (the ``>= tau`` test would otherwise mark every cell occupied,
+    absent blocks included).
+    """
+    if tau <= 0.0:
+        return compute_c_structure(norm_a > 0, norm_b > 0, cap_c)
+    # max over k of norm_a[i,k] * norm_b[k,j]: (g,g) @ (g,g) tropical product
+    best = jnp.max(norm_a[:, :, None] * norm_b[None, :, :], axis=1)
+    mc = best >= tau
+    return _structure_from_occupancy(mc, cap_c)
 
 
 def bsmm(a: BlockSparse, b: BlockSparse, *,

@@ -54,6 +54,7 @@ class WorkerStats:
     tasks_executed: int = 0
     busy_time: float = 0.0
     dedup_hits: int = 0               # registrations resolved by content hash
+    flops_executed: float = 0.0       # useful flops of tasks run on this worker
 
 
 def content_fingerprint(obj: Any) -> Any:
@@ -64,6 +65,18 @@ def content_fingerprint(obj: Any) -> Any:
     """
     fp = getattr(obj, "content_fingerprint", None)
     return fp() if fp is not None else None
+
+
+def content_norm2(obj: Any) -> Optional[float]:
+    """Squared Frobenius norm of a chunk's payload, or None.
+
+    Duck-typed on a ``content_norm2()`` method so only chunk types whose
+    norm is meaningful from the bytes alone (leaf matrix chunks)
+    participate — internal quadtree chunks hold graph-local child ids and
+    opt out, exactly as they do for dedup fingerprints.
+    """
+    fn = getattr(obj, "content_norm2", None)
+    return fn() if fn is not None else None
 
 
 class ChunkStore:
@@ -97,6 +110,10 @@ class ChunkStore:
         self._by_fp: dict[Any, tuple[int, int]] = {}
         self._fp_of: dict[tuple[int, int], Any] = {}
         self._refs: dict[tuple[int, int], int] = {}
+        # chunk-norm cache (truncated multiply, DESIGN.md §5): computed on
+        # first norm2_of and dropped by free() so a dedup-released slot
+        # can never serve a stale norm to a later registration
+        self._norm2: dict[tuple[int, int], float] = {}
 
     # -- registration -----------------------------------------------------
     def _dedup_lookup(self, worker: int, obj: Any
@@ -227,6 +244,24 @@ class ChunkStore:
             return 0
         return self._sizes[cid.owner][cid.local]
 
+    def norm2_of(self, cid: Optional[ChunkId]) -> Optional[float]:
+        """Cached squared Frobenius norm of a chunk's payload.
+
+        Returns 0.0 for NIL and None for chunk types that opt out (see
+        :func:`content_norm2`).  The cache entry lives exactly as long as
+        the chunk: :meth:`free` drops it, so dedup'd reuse of a released
+        fingerprint can never read a stale norm.
+        """
+        if cid is None:
+            return 0.0
+        key = (cid.owner, cid.local)
+        v = self._norm2.get(key)
+        if v is None:
+            v = content_norm2(self._data[cid.owner][cid.local])
+            if v is not None:
+                self._norm2[key] = v
+        return v
+
     def free(self, cid: Optional[ChunkId]) -> None:
         """Model chunk deletion (temporaries freed by the library user).
 
@@ -248,6 +283,7 @@ class ChunkStore:
                 del self._by_fp[fp]
         size = self._sizes[cid.owner].pop(cid.local)
         del self._data[cid.owner][cid.local]
+        self._norm2.pop(key, None)
         self.stats[cid.owner].owned_bytes -= size
         for w in range(self.n_workers):
             if key in self._cache[w]:

@@ -40,6 +40,7 @@ padding counts, bytes packed) is recorded in :meth:`PallasEngine.stats`.
 from __future__ import annotations
 
 import dataclasses
+import math
 import time
 from typing import Any, Optional
 
@@ -66,6 +67,10 @@ class LeafPayload:
     tb: bool = False                # multiply: transpose B
     trans: bool = False             # syrk: A^T A instead of A A^T
     side: str = "left"              # sym_multiply: S B vs B S
+    tau: float = 0.0                # multiply: SpAMM block-pair threshold
+    # TruncationReport accumulating pruned-pair bounds; excluded from
+    # eq/hash (it is an accumulator identity, not part of the task's value)
+    trunc: Any = dataclasses.field(default=None, compare=False)
 
 
 class EngineRebindError(RuntimeError, ValueError):
@@ -181,12 +186,62 @@ def leaf_task_pairs(payload: LeafPayload, a_leaf: LeafMatrix,
                 if upper and i > j:
                     continue        # lower triangle skipped: symmetry saving
                 pairs.append((sa, ka, tra, sb, kb, trb, (i, j)))
+
+    if payload.tau > 0.0 and k == "multiply":
+        # SpAMM pruning inside the leaf (DESIGN.md §5): a block pair whose
+        # norm product is below tau is dropped *structurally* — both
+        # backends take their structure from this list, so pruned pairs
+        # never enter a Pallas wave and never touch the host library.
+        # Block norms are transpose-invariant: the stored key's cached
+        # norm is valid for either orientation.
+        srcs = {"a": a_leaf, "b": b_leaf}
+        flops_each = 2.0 * a_leaf.bs ** 3
+        kept = []
+        for pr in pairs:
+            sa, ka, _, sb, kb, _, _ = pr[:7]
+            bound = math.sqrt(srcs[sa].block_norm2(ka)
+                              * srcs[sb].block_norm2(kb))
+            if bound < payload.tau:
+                if payload.trunc is not None:
+                    payload.trunc.record_leaf_pair(bound, flops_each)
+            else:
+                kept.append(pr)
+        pairs = kept
     return pairs, upper
 
 
 # ---------------------------------------------------------------------------
 # Reference backend
 # ---------------------------------------------------------------------------
+
+def execute_pairs_host(a_leaf: LeafMatrix, b_leaf: Optional[LeafMatrix],
+                       pairs: list, upper: bool,
+                       stats: Optional[LeafStats] = None) -> LeafMatrix:
+    """Evaluate a leaf task from its (possibly pruned) block-pair list.
+
+    This is the host-side twin of the Pallas wave: the structure comes
+    from :func:`leaf_task_pairs`, so a truncated multiply produces the
+    same block occupancy on both backends by construction.
+    """
+    dtype = a_leaf.dtype if b_leaf is None \
+        else np.result_type(a_leaf.dtype, b_leaf.dtype)
+    out = LeafMatrix(a_leaf.n, a_leaf.bs, upper=upper, dtype=dtype)
+    srcs = {"a": a_leaf, "b": b_leaf}
+    for sa, ka, tra, sb, kb, trb, out_key in pairs:
+        ab = srcs[sa].blocks[ka]
+        bb = srcs[sb].blocks[kb]
+        prod = (ab.T if tra else ab) @ (bb.T if trb else bb)
+        cur = out.blocks.get(out_key)
+        if cur is None:
+            out.blocks[out_key] = prod
+        else:
+            cur += prod
+    if stats is not None:
+        stats.block_multiplies += len(pairs)
+        stats.flops += 2.0 * len(pairs) * a_leaf.bs ** 3
+        stats.batches += 1 if pairs else 0
+    return out
+
 
 class NumpyEngine(LeafEngine):
     """Immediate per-task execution with the host leaf library (§4.1)."""
@@ -199,7 +254,13 @@ class NumpyEngine(LeafEngine):
             g.value_of(payload.b) if payload.b is not None else None)
         st = LeafStats()
         k = payload.kind
-        if k == "multiply":
+        if k == "multiply" and payload.tau > 0.0:
+            # truncated path: structure (incl. SpAMM pair pruning) comes
+            # from leaf_task_pairs — identical to the pallas backend's —
+            # and the surviving pairs are evaluated with the host library
+            pairs, upper = leaf_task_pairs(payload, av.leaf, bv.leaf)
+            res = execute_pairs_host(av.leaf, bv.leaf, pairs, upper, st)
+        elif k == "multiply":
             res = leaf_multiply(av.leaf, bv.leaf, ta=payload.ta,
                                 tb=payload.tb, stats=st)
             upper = False
@@ -328,7 +389,20 @@ class PallasEngine(LeafEngine):
         # bsmm.compute_c_structure assigns; see validate_structure)
         keys = sorted({p[6] for p in pairs})
         if self.validate_structure:
-            assert keys == self._c_keys(payload, a_leaf, b_leaf, upper)
+            oracle = self._c_keys(payload, a_leaf, b_leaf, upper)
+            if payload.tau > 0.0:
+                # the jnp oracle evaluates the tau test in float32; allow
+                # it to disagree only on pairs within f32 rounding of the
+                # boundary by bracketing with slightly shifted taus
+                def keys_at(t):
+                    probe = dataclasses.replace(payload, tau=t, trunc=None)
+                    prs, _ = leaf_task_pairs(probe, a_leaf, b_leaf)
+                    return {p[6] for p in prs}
+                strict = keys_at(payload.tau * (1 + 1e-5))
+                loose = keys_at(payload.tau * (1 - 1e-5))
+                assert strict <= set(oracle) <= loose
+            else:
+                assert keys == oracle
         if not keys:
             return None
         out = alloc_structure(a_leaf.n, a_leaf.bs, keys, upper=upper,
@@ -353,12 +427,30 @@ class PallasEngine(LeafEngine):
 
         The operand masks are the op-applied structure views; the C keys come
         back in compute_c_structure's row-major slot order, which fixes the
-        packed output slot numbering of the flush wave.
+        packed output slot numbering of the flush wave.  A truncated
+        multiply (``payload.tau > 0``) cross-checks against the
+        norm-weighted structure (:func:`~repro.core.bsmm
+        .compute_c_structure_norms`) instead: a C block survives only if
+        some inner pair's norm product clears tau.
         """
-        from .bsmm import compute_c_structure
+        from .bsmm import compute_c_structure, compute_c_structure_norms
         import jax.numpy as jnp
 
         grid = a_leaf.grid
+        if payload.kind == "multiply" and payload.tau > 0.0:
+            na = np.zeros((grid, grid))
+            nb = np.zeros((grid, grid))
+            for i, k, key, _ in _plain_items(a_leaf, payload.ta):
+                na[i, k] = math.sqrt(a_leaf.block_norm2(key))
+            for k, j, key, _ in _plain_items(b_leaf, payload.tb):
+                nb[k, j] = math.sqrt(b_leaf.block_norm2(key))
+            crows, ccols, _, cnt = compute_c_structure_norms(
+                jnp.asarray(na), jnp.asarray(nb), payload.tau,
+                cap_c=grid * grid)
+            cnt = int(cnt)
+            return [(int(r), int(c)) for r, c
+                    in zip(np.asarray(crows)[:cnt], np.asarray(ccols)[:cnt])]
+
         ma = np.zeros((grid, grid), bool)
         mb = np.zeros((grid, grid), bool)
         kfirst = payload.kind
@@ -440,11 +532,13 @@ class PallasEngine(LeafEngine):
                 blk[...] = a
             else:
                 np.add(a, b, out=blk, casting="unsafe")
+        t.out.invalidate_norms()
 
     @staticmethod
     def _run_transpose(t: _Pending) -> None:
         for (i, j), blk in t.a_leaf.blocks.items():
             t.out.blocks[(j, i)][...] = blk.T
+        t.out.invalidate_norms()
 
     def _run_wave(self, wave: list[_Pending]) -> None:
         groups: dict[int, list[_Pending]] = {}

@@ -45,7 +45,8 @@ class LeafMatrix:
     ``U + U^T - diag(U)`` with symmetric diagonal blocks.
     """
 
-    __slots__ = ("n", "bs", "blocks", "upper", "dtype")
+    __slots__ = ("n", "bs", "blocks", "upper", "dtype",
+                 "_bnorm2", "_norm2_tot")
 
     def __init__(self, n: int, bs: int, blocks: Optional[dict] = None,
                  upper: bool = False, dtype=np.float64):
@@ -55,6 +56,11 @@ class LeafMatrix:
         self.blocks: dict[tuple[int, int], np.ndarray] = blocks or {}
         self.upper = upper
         self.dtype = dtype
+        # squared-Frobenius norm caches (per stored block + total), filled
+        # lazily and dropped by invalidate_norms() whenever block data is
+        # mutated in place (engine wave fills, deferred adds/transposes)
+        self._bnorm2: Optional[dict[tuple[int, int], float]] = None
+        self._norm2_tot: Optional[float] = None
 
     # -- construction -------------------------------------------------------
     @classmethod
@@ -108,8 +114,42 @@ class LeafMatrix:
     def is_zero(self) -> bool:
         return not self.blocks
 
+    # -- norm caches (truncated multiply, DESIGN.md §5) ----------------------
+    def block_norm2(self, key: tuple[int, int]) -> float:
+        """Squared Frobenius norm of one stored block, cached.
+
+        The cache is what makes SpAMM-style pruning cheap: the truncated
+        multiply queries every candidate block pair, but each block is
+        reduced once.
+        """
+        if self._bnorm2 is None:
+            self._bnorm2 = {}
+        v = self._bnorm2.get(key)
+        if v is None:
+            blk = self.blocks[key]
+            v = float((blk * blk).sum())
+            self._bnorm2[key] = v
+        return v
+
+    def norm2(self) -> float:
+        """Squared Frobenius norm of the *stored* blocks, cached.
+
+        For upper-triangular storage this is the norm of the stored upper
+        triangle; the full symmetric norm (off-diagonal blocks counted
+        twice) is assembled at the quadtree layer (qt_norm2).
+        """
+        if self._norm2_tot is None:
+            self._norm2_tot = float(
+                sum(self.block_norm2(k) for k in self.blocks))
+        return self._norm2_tot
+
+    def invalidate_norms(self) -> None:
+        """Drop norm caches after in-place mutation of block data."""
+        self._bnorm2 = None
+        self._norm2_tot = None
+
     def frob2(self) -> float:
-        return float(sum((b * b).sum() for b in self.blocks.values()))
+        return self.norm2()
 
     # -- structure views ------------------------------------------------------
     def cols_by_k(self) -> dict[int, list[tuple[int, np.ndarray]]]:
@@ -130,6 +170,11 @@ class LeafMatrix:
         out = LeafMatrix(self.n, self.bs, dtype=self.dtype)
         for (i, j), blk in self.blocks.items():
             out.blocks[(j, i)] = np.ascontiguousarray(blk.T)
+        # norms are transpose-invariant: carry the caches over (maintained,
+        # not recomputed) with keys mirrored
+        if self._bnorm2 is not None:
+            out._bnorm2 = {(j, i): v for (i, j), v in self._bnorm2.items()}
+        out._norm2_tot = self._norm2_tot
         return out
 
     def symmetrize_full(self) -> "LeafMatrix":
@@ -156,9 +201,11 @@ def unpack_blocks(leaf: LeafMatrix, keys: Iterable[tuple[int, int]],
 
     In-place assignment (rather than rebinding) is what lets the engine fill
     placeholder blocks after downstream tasks already hold references.
+    Norm caches computed against the zero placeholders are dropped.
     """
     for key, blk in zip(keys, data):
         leaf.blocks[key][...] = blk
+    leaf.invalidate_norms()
 
 
 def alloc_structure(n: int, bs: int, keys: Iterable[tuple[int, int]],

@@ -28,16 +28,58 @@ across the whole quadtree into fused kernel waves (§4.1 batched leaf work).
 """
 from __future__ import annotations
 
+import dataclasses
 import math
 from typing import Optional
 
 from .engine import LeafPayload
-from .quadtree import MatrixChunk, QTParams
+from .quadtree import MatrixChunk, QTParams, _norm2
 from .tasks import Alias, CTGraph, Dep
 
 
 def _level_of(params: QTParams, n: int) -> int:
     return int(round(math.log2(params.n // n)))
+
+
+@dataclasses.dataclass
+class TruncationReport:
+    """Running record of one error-controlled truncated multiply.
+
+    ``error_bound`` is a worst-case bound on ``||C_exact - C_tau||_F``:
+    every pruned product P = op(A') op(B') satisfies
+    ``||P||_F <= ||A'||_F ||B'||_F < tau`` (submultiplicativity), and by
+    the triangle inequality the total error of dropping a set of products
+    is at most the sum of their individual bounds.  Subtree prunes (any
+    quadtree level) and within-leaf block-pair prunes both contribute;
+    a subtree pruned as a whole is counted once, covering all its
+    descendants.  See DESIGN.md §5 for the derivation.
+    """
+    tau: float
+    error_bound: float = 0.0        # running worst-case ||C_exact - C_tau||_F
+    pruned_subtrees: int = 0        # recursive products pruned, any level
+    pruned_leaf_pairs: int = 0      # block pairs pruned inside leaf tasks
+    pruned_flops: float = 0.0       # leaf-pair flops avoided (2 bs^3 each)
+    pruned_by_level: dict[int, int] = dataclasses.field(default_factory=dict)
+
+    def record_subtree(self, bound: float, level: int) -> None:
+        self.error_bound += bound
+        self.pruned_subtrees += 1
+        self.pruned_by_level[level] = self.pruned_by_level.get(level, 0) + 1
+
+    def record_leaf_pair(self, bound: float, flops: float) -> None:
+        self.error_bound += bound
+        self.pruned_leaf_pairs += 1
+        self.pruned_flops += flops
+
+    def to_dict(self) -> dict:
+        return {
+            "tau": self.tau,
+            "error_bound": self.error_bound,
+            "pruned_subtrees": self.pruned_subtrees,
+            "pruned_leaf_pairs": self.pruned_leaf_pairs,
+            "pruned_flops": self.pruned_flops,
+            "pruned_by_level": dict(self.pruned_by_level),
+        }
 
 
 def _register_create(g: CTGraph, n: int, cids: tuple, upper: bool,
@@ -91,18 +133,49 @@ def qt_add(g: CTGraph, params: QTParams, a: Optional[int], b: Optional[int]
 
 
 def qt_multiply(g: CTGraph, params: QTParams, a: Optional[int],
-                b: Optional[int], ta: bool = False, tb: bool = False
-                ) -> Optional[int]:
-    """C = op(A) op(B) (Algorithm 1 + transposed variants, §3.2)."""
+                b: Optional[int], ta: bool = False, tb: bool = False,
+                tau: float = 0.0,
+                trunc: Optional[TruncationReport] = None) -> Optional[int]:
+    """C = op(A) op(B) (Algorithm 1 + transposed variants, §3.2).
+
+    ``tau > 0`` enables SpAMM-style hierarchical norm truncation
+    (DESIGN.md §5): at *every* recursion level the product is pruned to
+    NIL when ``||A'||_F ||B'||_F < tau`` (cached subtree norms,
+    :func:`~repro.core.quadtree.qt_norm2`), and inside surviving leaf
+    tasks block pairs are pruned by the same test on cached per-block
+    norms — pruned pairs never reach the leaf engine, so they never
+    enter a Pallas wave.  Each prune's bound is accumulated into
+    ``trunc`` (a :class:`TruncationReport`), whose ``error_bound`` is a
+    worst-case bound on ``||C_exact - C_tau||_F``.  Norms are
+    transpose-invariant, so ``ta``/``tb`` need no special casing.
+
+    ``tau == 0`` is *graph-for-graph identical* to the exact multiply
+    (pinned by tests/test_truncation.py): no flush, no norm reads, no
+    pruning — the strict ``< tau`` test can never fire.
+    """
     if g.is_nil(a) or g.is_nil(b):
         return None
     ac: MatrixChunk = g.value_of(a)
     level = _level_of(params, ac.n)
 
+    if tau > 0.0:
+        if ac.n == params.n:
+            # root entry: deferred waves must have filled the operands'
+            # blocks before their norms mean anything.  Recursive calls
+            # skip this (flushing mid-registration would fragment the
+            # engine's cross-leaf batching of the product's own leaves).
+            g.flush()
+        bound = math.sqrt(_norm2(g, a) * _norm2(g, b))
+        if bound < tau:
+            if trunc is not None:
+                trunc.record_subtree(bound, level)
+            return None
+
     if ac.is_leaf:
         nid = g.register_task(
             "multiply", None, [Dep(a), Dep(b)],
-            payload=LeafPayload("multiply", a=a, b=b, ta=ta, tb=tb))
+            payload=LeafPayload("multiply", a=a, b=b, ta=ta, tb=tb,
+                                tau=tau, trunc=trunc))
         g.nodes[nid].level = level
         return nid
 
@@ -116,8 +189,10 @@ def qt_multiply(g: CTGraph, params: QTParams, a: Optional[int],
         cids = []
         for m in (0, 1):
             for n in (0, 1):
-                y1 = qt_multiply(g, params, asub(m, 0), bsub(0, n), ta, tb)
-                y2 = qt_multiply(g, params, asub(m, 1), bsub(1, n), ta, tb)
+                y1 = qt_multiply(g, params, asub(m, 0), bsub(0, n), ta, tb,
+                                 tau=tau, trunc=trunc)
+                y2 = qt_multiply(g, params, asub(m, 1), bsub(1, n), ta, tb,
+                                 tau=tau, trunc=trunc)
                 cids.append(qt_add(g, params, y1, y2))
         return Alias(_register_create(g, av.n, tuple(cids), False, level))
 
@@ -155,7 +230,12 @@ def qt_transpose(g: CTGraph, params: QTParams, a: Optional[int]
         c00, c01, c10, c11 = av.children
         cids = (qt_transpose(g, params, c00), qt_transpose(g, params, c10),
                 qt_transpose(g, params, c01), qt_transpose(g, params, c11))
-        return Alias(_register_create(g, av.n, cids, False, level))
+        created = _register_create(g, av.n, cids, False, level)
+        if created is not None and av.norm2 is not None:
+            # the Frobenius norm is transpose-invariant: maintain the
+            # cache instead of recomputing it on the result subtree
+            g.value_of(created).norm2 = av.norm2
+        return Alias(created)
 
     nid = g.register_task("transpose", fn, [Dep(a)])
     g.nodes[nid].level = level

@@ -48,7 +48,7 @@ class QTParams(Chunk):
 class MatrixChunk(Chunk):
     """Basic matrix chunk (§3.1): leaf payload or 4 child chunk identifiers."""
 
-    __slots__ = ("n", "leaf", "children", "upper")
+    __slots__ = ("n", "leaf", "children", "upper", "norm2")
 
     def __init__(self, n: int, leaf: Optional[LeafMatrix] = None,
                  children: Optional[tuple] = None, upper: bool = False):
@@ -56,6 +56,12 @@ class MatrixChunk(Chunk):
         self.leaf = leaf
         self.children = children  # (c00, c01, c10, c11) node ids or None
         self.upper = upper
+        # cached squared Frobenius norm of the *full* (symmetric-expanded)
+        # submatrix this chunk roots; None until computed by qt_norm2.
+        # Chunk contents are write-once (placeholder leaves are filled
+        # exactly once by an engine flush), so a value computed after a
+        # flush stays valid for the chunk's lifetime.
+        self.norm2: Optional[float] = None
 
     @property
     def is_leaf(self) -> bool:
@@ -89,6 +95,24 @@ class MatrixChunk(Chunk):
             h.update(str(key).encode())
             h.update(np.ascontiguousarray(lf.blocks[key]).tobytes())
         return h.digest()
+
+    def content_norm2(self) -> Optional[float]:
+        """Squared Frobenius norm for :meth:`ChunkStore.norm2_of`.
+
+        Leaf chunks report the full (symmetric-expanded) norm of their
+        block data; internal chunks opt out — their children are
+        graph-local node ids, so the norm is a property of the quadtree
+        walk (:func:`qt_norm2`), not of this chunk's bytes.
+        """
+        if self.leaf is None:
+            return None
+        if not self.upper:
+            return self.leaf.norm2()
+        tot = 0.0
+        for (i, j) in self.leaf.blocks:
+            w = self.leaf.block_norm2((i, j))
+            tot += w if i == j else 2 * w
+        return tot
 
 
 # ---------------------------------------------------------------------------
@@ -251,28 +275,40 @@ def qt_stats(g: CTGraph, nid: Optional[int]) -> dict:
 
 
 def qt_frob2(g: CTGraph, nid: Optional[int]) -> float:
+    """Squared Frobenius norm of a quadtree matrix (alias of qt_norm2)."""
+    return qt_norm2(g, nid)
+
+
+def qt_norm2(g: CTGraph, nid: Optional[int]) -> float:
+    """Squared Frobenius norm, cached at every quadtree node (DESIGN.md §5).
+
+    Flushes first so deferred leaf waves have filled their placeholder
+    blocks; after a flush every registered chunk's content is final
+    (block fills are write-once), so the per-node caches stay valid even
+    as later task programs extend the graph with *new* chunks.
+    """
     g.flush()   # deferred leaf waves must have filled block data
-    return _frob2(g, nid)
+    return _norm2(g, nid)
 
 
-def _frob2(g: CTGraph, nid: Optional[int]) -> float:
+def _norm2(g: CTGraph, nid: Optional[int]) -> float:
+    """Non-flushing cached norm walk; callers must ensure chunk data is
+    final (the truncated multiply flushes once at its root entry)."""
     chunk: Optional[MatrixChunk] = g.value_of(nid)
     if chunk is None:
         return 0.0
+    if chunk.norm2 is not None:
+        return chunk.norm2
     if chunk.is_leaf:
-        if not chunk.upper:
-            return chunk.leaf.frob2()
+        tot = chunk.content_norm2()     # full symmetric-expanded leaf norm
+    else:
         tot = 0.0
-        for (i, j), blk in chunk.leaf.blocks.items():
-            w = float((blk * blk).sum())
-            tot += w if i == j else 2 * w
-        return tot
-    tot = 0.0
-    for idx, c in enumerate(chunk.children):
-        w = _frob2(g, c)
-        if chunk.upper and idx == 1:  # off-diagonal counted twice
-            w *= 2
-        tot += w
+        for idx, c in enumerate(chunk.children):
+            w = _norm2(g, c)
+            if chunk.upper and idx == 1:  # off-diagonal counted twice
+                w *= 2
+            tot += w
+    chunk.norm2 = tot
     return tot
 
 

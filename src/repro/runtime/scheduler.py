@@ -78,6 +78,7 @@ class SimReport:
     bytes_pushed: list[int] = dataclasses.field(default_factory=list)
     cache_hits: list[int] = dataclasses.field(default_factory=list)
     dedup_hits: list[int] = dataclasses.field(default_factory=list)
+    flops_executed: list[float] = dataclasses.field(default_factory=list)
     steal_time_s: float = 0.0
     trace: Optional[Trace] = None
     crit: Optional[CriticalPath] = None
@@ -89,6 +90,16 @@ class SimReport:
     @property
     def max_bytes_received(self) -> int:
         return max(self.bytes_received)
+
+    @property
+    def n_tasks(self) -> int:
+        """Tasks executed in this phase (truncation shrinks it)."""
+        return sum(self.tasks_per_worker)
+
+    @property
+    def total_flops(self) -> float:
+        """Useful flops executed in this phase across workers."""
+        return sum(self.flops_executed)
 
     @property
     def active_fraction(self) -> list[float]:
@@ -116,6 +127,8 @@ class SimReport:
             "messages_received": self.messages_received,
             "peak_owned": self.peak_owned,
             "tasks_per_worker": self.tasks_per_worker,
+            "n_tasks": self.n_tasks,
+            "total_flops": self.total_flops,
             "steals": self.steals,
             "parallel_efficiency": self.parallel_efficiency,
         }
@@ -218,6 +231,7 @@ class Scheduler:
             s.tasks_executed = 0
             s.busy_time = 0.0
             s.dedup_hits = 0
+            s.flops_executed = 0.0
 
     # -- the discrete-event loop -------------------------------------------
     def run(self, g: CTGraph, n_workers: Optional[int] = None,
@@ -361,6 +375,7 @@ class Scheduler:
             t_end = t + dur
             st.tasks_executed += 1
             st.busy_time += dur
+            st.flops_executed += node.flops
             trace.append(TaskEvent(nid=nid, kind=node.kind, worker=w,
                                    start=t, end=t_end, stolen=stolen,
                                    remote_bytes=remote_bytes,
@@ -410,6 +425,7 @@ class Scheduler:
             bytes_pushed=[s.bytes_pushed for s in st],
             cache_hits=[s.cache_hits for s in st],
             dedup_hits=[s.dedup_hits for s in st],
+            flops_executed=[s.flops_executed for s in st],
             steal_time_s=steal_time,
             trace=trace,
             crit=crit,

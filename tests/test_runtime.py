@@ -1,0 +1,164 @@
+"""Runtime fault-tolerance + wire-compression units (runtime/fault.py,
+runtime/compression.py) — the suite promised by the fault module docstring.
+
+Covers failure/straggler detection timing (HeartbeatMonitor), the
+deterministic failure schedule (FaultInjector), the restartable training
+loop with real (small) state and real injected failures (TrainingRunner),
+and the int8 quantize/dequantize error bounds the gradient-compression
+path advertises.
+"""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.checkpoint import CheckpointManager
+from repro.runtime.compression import (compressed_grad_tree, dequantize_int8,
+                                       quantize_int8)
+from repro.runtime.fault import (FaultInjector, HeartbeatMonitor,
+                                 TrainingRunner, WorkerFailure)
+
+
+class TestHeartbeatMonitor:
+
+    def test_silent_worker_declared_failed(self):
+        mon = HeartbeatMonitor(n_workers=3, timeout=10.0)
+        assert mon.failed_workers() == []
+        mon.last_seen[1] -= 11.0        # silent past the timeout
+        assert mon.failed_workers() == [1]
+        mon.beat(1)                     # heartbeat arrives: recovered
+        assert mon.failed_workers() == []
+
+    def test_multiple_failures_reported_sorted(self):
+        mon = HeartbeatMonitor(n_workers=4, timeout=5.0)
+        mon.last_seen[2] -= 6.0
+        mon.last_seen[0] -= 7.0
+        assert mon.failed_workers() == [0, 2]
+
+    def test_straggler_flagged_against_fleet_median(self):
+        mon = HeartbeatMonitor(n_workers=4, straggler_factor=2.0)
+        for step in range(6):
+            for w in range(4):
+                mon.beat(w, step_time=1.0 if w != 3 else 3.5)
+        assert mon.stragglers() == [3]
+
+    def test_straggler_uses_recent_window(self):
+        """Only the last 5 step times count: a recovered worker clears."""
+        mon = HeartbeatMonitor(n_workers=3, straggler_factor=2.0)
+        for _ in range(5):
+            for w in range(3):
+                mon.beat(w, step_time=4.0 if w == 0 else 1.0)
+        assert mon.stragglers() == [0]
+        for _ in range(5):              # worker 0 back to fleet speed
+            for w in range(3):
+                mon.beat(w, step_time=1.0)
+        assert mon.stragglers() == []
+
+    def test_no_step_times_no_stragglers(self):
+        mon = HeartbeatMonitor(n_workers=2)
+        assert mon.stragglers() == []
+
+
+class TestFaultInjector:
+
+    def test_raises_at_scheduled_step_once(self):
+        inj = FaultInjector(fail_at={3: 1})
+        for step in (0, 1, 2):
+            inj.check(step)
+        with pytest.raises(WorkerFailure) as ei:
+            inj.check(3)
+        assert ei.value.worker == 1 and ei.value.step == 3
+        inj.check(3)                    # schedule entry consumed: no raise
+
+    def test_deterministic_schedule(self):
+        """Two injectors with the same schedule fail identically."""
+        def run(inj):
+            hits = []
+            for step in range(10):
+                try:
+                    inj.check(step)
+                except WorkerFailure as e:
+                    hits.append((e.step, e.worker))
+            return hits
+
+        sched = {2: 0, 7: 3}
+        assert run(FaultInjector(dict(sched))) == \
+            run(FaultInjector(dict(sched))) == [(2, 0), (7, 3)]
+
+
+class TestTrainingRunner:
+
+    def _runner(self, tmp_path, fail_at, ckpt_every=2, max_restarts=3):
+        def step_fn(state, batch):
+            return state + batch, {"loss": float(jnp.sum(state))}
+
+        def batch_fn(step):
+            return jnp.ones(()) * (step + 1)
+
+        ckpt = CheckpointManager(tmp_path, keep=3)
+        return TrainingRunner(step_fn=step_fn, batch_fn=batch_fn, ckpt=ckpt,
+                              ckpt_every=ckpt_every,
+                              max_restarts=max_restarts,
+                              injector=FaultInjector(dict(fail_at)))
+
+    def test_restart_resumes_exactly(self, tmp_path):
+        """A mid-run failure restores the last checkpoint and the final
+        state matches the failure-free run (pure step_fn + stateless
+        batch_fn => bitwise resumable)."""
+        n_steps = 7
+        clean, _ = self._runner(tmp_path / "clean", {}).run(
+            jnp.zeros(()), n_steps)
+        state, hist = self._runner(tmp_path / "faulty", {5: 0}).run(
+            jnp.zeros(()), n_steps)
+        assert hist["restarts"] == 1
+        assert hist["restored_from"] == [4]     # ckpt_every=2 -> step 4
+        np.testing.assert_allclose(np.asarray(state), np.asarray(clean))
+
+    def test_too_many_failures_reraise(self, tmp_path):
+        runner = self._runner(tmp_path, {1: 0, 2: 0}, max_restarts=1)
+        with pytest.raises(WorkerFailure):
+            runner.run(jnp.zeros(()), 5)
+
+
+class TestInt8Compression:
+
+    @pytest.mark.parametrize("seed", [0, 1, 2])
+    def test_roundtrip_error_bound(self, seed):
+        """Per-element error <= scale/2 = max|g| / 254 (symmetric int8)."""
+        rng = np.random.default_rng(seed)
+        g = jnp.asarray(rng.standard_normal((64, 33)) * 10.0 ** seed,
+                        dtype=jnp.float32)
+        q, scale = quantize_int8(g)
+        assert q.dtype == jnp.int8
+        assert float(scale) == pytest.approx(float(jnp.max(jnp.abs(g))) / 127,
+                                             rel=1e-6)
+        back = dequantize_int8(q, scale)
+        err = np.abs(np.asarray(back) - np.asarray(g))
+        assert float(err.max()) <= float(scale) / 2 * (1 + 1e-6)
+        # relative error on the wire format's own terms: <1% of max|g|
+        assert float(err.max()) <= 0.01 * float(jnp.max(jnp.abs(g)))
+
+    def test_zero_tensor_safe(self):
+        q, scale = quantize_int8(jnp.zeros((8, 8)))
+        assert float(jnp.max(jnp.abs(dequantize_int8(q, scale)))) == 0.0
+
+    def test_extremes_map_to_full_range(self):
+        g = jnp.asarray([-3.0, 0.0, 3.0])
+        q, _ = quantize_int8(g)
+        assert int(q[0]) == -127 and int(q[2]) == 127
+
+    def test_grad_tree_roundtrip_preserves_structure(self):
+        rng = np.random.default_rng(3)
+        grads = {"w": jnp.asarray(rng.standard_normal((16, 4)),
+                                  dtype=jnp.float32),
+                 "b": jnp.asarray(rng.standard_normal(4),
+                                  dtype=jnp.bfloat16)}
+        out = compressed_grad_tree(grads)
+        assert set(out) == {"w", "b"}
+        for k in out:
+            assert out[k].shape == grads[k].shape
+            assert out[k].dtype == grads[k].dtype
+            ref = np.asarray(grads[k], dtype=np.float32)
+            err = np.abs(np.asarray(out[k], dtype=np.float32) - ref)
+            bound = np.abs(ref).max() / 254 + 0.02 * np.abs(ref).max()
+            assert float(err.max()) <= float(bound)

@@ -1,0 +1,377 @@
+"""Error-controlled truncated multiply (SpAMM-style, DESIGN.md §5).
+
+Pins the truncation tentpole four ways:
+
+1. **Error contract** (property tests): the measured truncation error
+   ``||C_exact - C_tau||_F`` never exceeds the reported worst-case bound,
+   across random/banded/S2 decay patterns, taus spanning ten decades, and
+   both leaf engines.
+2. **tau=0 identity** (pinned): a truncated multiply with tau=0 registers
+   a task graph *identical* to the exact path — kinds, per-level counts,
+   flops, and the simulated schedule — and its numeric result is
+   bit-identical under the numpy engine.
+3. **Monotonicity**: flops, task counts and communication demand are
+   non-increasing in tau (the pruned-pair set only grows).
+4. **Norm-cache maintenance**: cached norms stay consistent through
+   ``A + B``, ``A.T``, ``sym_square``, engine wave fills, and
+   ChunkStore free/dedup (no stale reads).
+"""
+import math
+
+import numpy as np
+import pytest
+
+from _hyp import given, settings, st
+
+from repro import Session
+from repro.core import analysis as an
+from repro.core.chunks import ChunkStore
+from repro.core.leaf import LeafMatrix
+from repro.core.multiply import TruncationReport, qt_multiply
+from repro.core.patterns import (banded_mask, divide_space_order,
+                                 overlap_mask, particle_cloud, random_mask,
+                                 random_symmetric_mask, values_for_mask)
+from repro.core.quadtree import (MatrixChunk, QTParams, qt_from_dense,
+                                 qt_norm2)
+from repro.core.tasks import CTGraph
+from repro.runtime.scheduler import Scheduler
+
+N, LEAF_N, BS = 64, 16, 4
+
+
+def _decay(n=N, alpha=0.25):
+    dist = np.abs(np.subtract.outer(np.arange(n), np.arange(n)))
+    return np.exp(-alpha * dist)
+
+
+def _s2_mask(n=N):
+    coords = particle_cloud(4, 3, seed=7)          # 64 basis functions
+    order = divide_space_order(coords)
+    return overlap_mask(coords, 6.0, order=order)
+
+
+# decay-valued operands: what truncation is *for* (paper §6.2 matrices)
+PATTERNS = {
+    "random": lambda seed: values_for_mask(
+        random_mask(N, 0.2, seed=seed), seed=seed) * _decay(alpha=0.1),
+    "banded": lambda seed: values_for_mask(
+        banded_mask(N, 24), seed=seed) * _decay(alpha=0.2),
+    "s2": lambda seed: values_for_mask(_s2_mask(), seed=seed)
+    * _decay(alpha=0.15),
+}
+
+
+def _session(engine="numpy", **kw):
+    kw.setdefault("leaf_n", LEAF_N)
+    kw.setdefault("bs", BS)
+    return Session(engine=engine, **kw)
+
+
+def _err_slack(a, b):
+    # float-rounding slack: the truncated leaf path sums block products
+    # in a different order than the exact path, so a tau pruning nothing
+    # can still differ by O(eps ||A|| ||B||); pallas adds float32 packing
+    return 1e-4 * math.sqrt(float((a * a).sum()) * float((b * b).sum()))
+
+
+def _check_bound(engine, pattern, seed, tau):
+    a = PATTERNS[pattern](seed)
+    b = PATTERNS[pattern](seed + 1)
+    exact_sess = _session(engine=engine)
+    exact = (exact_sess.from_dense(a) @ exact_sess.from_dense(b)).to_dense()
+
+    sess = _session(engine=engine)
+    C = sess.from_dense(a).multiply(sess.from_dense(b), tau=tau)
+    err = float(np.linalg.norm(exact - C.to_dense()))
+    assert err <= C.error_bound + _err_slack(a, b), (
+        f"{engine}/{pattern} tau={tau}: measured {err} > "
+        f"bound {C.error_bound}")
+    return C
+
+
+@settings(max_examples=12, deadline=None)
+@given(seed=st.integers(0, 100), pattern=st.sampled_from(sorted(PATTERNS)),
+       exp=st.integers(-8, 0))
+def test_property_error_within_bound_numpy(seed, pattern, exp):
+    """Measured error <= reported bound, numpy engine, tau over 9 decades."""
+    _check_bound("numpy", pattern, seed, tau=10.0 ** exp)
+
+
+@pytest.mark.pallas
+@settings(max_examples=6, deadline=None)
+@given(seed=st.integers(0, 100), pattern=st.sampled_from(sorted(PATTERNS)),
+       exp=st.integers(-6, 0))
+def test_property_error_within_bound_pallas(seed, pattern, exp):
+    """Same contract through the deferred, cross-leaf-batched engine."""
+    _check_bound("pallas", pattern, seed, tau=10.0 ** exp)
+
+
+@pytest.mark.pallas
+def test_validate_structure_cross_checks_norm_oracle():
+    """PallasEngine(validate_structure=True) with tau>0 checks every leaf
+    structure against bsmm.compute_c_structure_norms (f32-boundary-safe)."""
+    from repro.core.engine import PallasEngine
+    a = PATTERNS["banded"](41)
+    b = PATTERNS["banded"](42)
+    sess = _session(engine=PallasEngine(validate_structure=True))
+    C = sess.from_dense(a).multiply(sess.from_dense(b), tau=1e-2)
+    err = float(np.linalg.norm(a @ b - C.to_dense()))
+    assert err <= C.error_bound + _err_slack(a, b)
+
+
+@pytest.mark.pallas
+def test_engines_agree_on_truncated_structure():
+    """Both engines prune the same pairs: same result occupancy, same
+    error bound, and numerics agree to float32 packing precision."""
+    a = PATTERNS["banded"](3)
+    b = PATTERNS["banded"](4)
+    outs, bounds, nnz = {}, {}, {}
+    for engine in ("numpy", "pallas"):
+        sess = _session(engine=engine)
+        C = sess.from_dense(a).multiply(sess.from_dense(b), tau=1e-2)
+        outs[engine] = C.to_dense()
+        bounds[engine] = C.error_bound
+        nnz[engine] = C.nnz_blocks()
+    assert nnz["numpy"] == nnz["pallas"]
+    assert bounds["numpy"] == pytest.approx(bounds["pallas"], rel=1e-9)
+    np.testing.assert_allclose(outs["pallas"], outs["numpy"],
+                               atol=1e-4, rtol=1e-4)
+
+
+class TestTauZeroIdentity:
+    """tau=0 is graph-for-graph the exact multiply (pinned)."""
+
+    def _inputs(self):
+        return PATTERNS["banded"](1), PATTERNS["s2"](2)
+
+    def test_graph_identical_kinds_counts_flops(self):
+        a, b = self._inputs()
+        params = QTParams(N, LEAF_N, BS)
+        g = CTGraph()
+        qt_multiply(g, params, qt_from_dense(g, a, params),
+                    qt_from_dense(g, b, params))
+
+        gt = CTGraph()
+        rep = TruncationReport(tau=0.0)
+        qt_multiply(gt, params, qt_from_dense(gt, a, params),
+                    qt_from_dense(gt, b, params), tau=0.0, trunc=rep)
+
+        assert g.count_kinds() == gt.count_kinds()
+        from repro.core.multiply import count_tasks_per_level, total_flops
+        assert count_tasks_per_level(g) == count_tasks_per_level(gt)
+        assert total_flops(g) == pytest.approx(total_flops(gt))
+        assert [n.kind for n in g.nodes] == [n.kind for n in gt.nodes]
+        assert [n.parent for n in g.nodes] == [n.parent for n in gt.nodes]
+        assert rep.error_bound == 0.0 and rep.pruned_subtrees == 0
+
+    def test_simulated_schedule_identical(self):
+        """Same registrations + same seed => bit-identical replay."""
+        a, b = self._inputs()
+        params = QTParams(N, LEAF_N, BS)
+        reports = {}
+        for tau in (None, 0.0):
+            g = CTGraph()
+            sched = Scheduler(seed=0)
+            ra = qt_from_dense(g, a, params)
+            rb = qt_from_dense(g, b, params)
+            sched.run(g, n_workers=4, placement="parent-worker")
+            sched.reset_stats()
+            if tau is None:
+                qt_multiply(g, params, ra, rb)
+            else:
+                qt_multiply(g, params, ra, rb, tau=tau,
+                            trunc=TruncationReport(tau=tau))
+            reports[tau] = sched.run(g)
+        want, got = reports[None], reports[0.0]
+        assert got.bytes_received == want.bytes_received
+        assert got.tasks_per_worker == want.tasks_per_worker
+        assert got.makespan == pytest.approx(want.makespan)
+        assert got.steals == want.steals
+        assert got.flops_executed == want.flops_executed
+
+    def test_facade_tau_zero_bitwise_exact(self):
+        a, b = self._inputs()
+        s1, s2 = _session(), _session()
+        exact = (s1.from_dense(a) @ s1.from_dense(b)).to_dense()
+        trunc = s2.from_dense(a).multiply(s2.from_dense(b), tau=0.0)
+        assert np.array_equal(trunc.to_dense(), exact)
+        assert trunc.error_bound == 0.0
+        assert s1.task_counts() == s2.task_counts()
+
+    def test_session_default_tau_threads_through_matmul(self):
+        a, b = self._inputs()
+        sess = _session(tau=1e-2)
+        C = sess.from_dense(a) @ sess.from_dense(b)       # uses session tau
+        assert C.truncation is not None
+        assert C.truncation.tau == 1e-2
+        assert C.error_bound > 0.0
+        sess0 = _session()
+        C0 = sess0.from_dense(a) @ sess0.from_dense(b)
+        assert sess.n_multiply_tasks < sess0.n_multiply_tasks or \
+            sess.flops < sess0.flops
+
+    def test_explicit_tau_on_symmetric_operand_raises(self):
+        s = values_for_mask(random_symmetric_mask(N, 0.1, seed=5), seed=5,
+                            symmetric=True)
+        sess = _session()
+        S = sess.from_dense(s, upper=True)
+        B = sess.from_dense(PATTERNS["banded"](6))
+        with pytest.raises(ValueError, match="plain"):
+            S.multiply(B, tau=1e-3)
+        # session-default tau routes silently to untruncated sym_multiply
+        sess2 = _session(tau=1e-3)
+        S2 = sess2.from_dense(s, upper=True)
+        B2 = sess2.from_dense(PATTERNS["banded"](6))
+        np.testing.assert_allclose((S2 @ B2).to_dense(),
+                                   s @ B2.to_dense(), atol=1e-10)
+
+
+class TestMonotonicity:
+    """The pruned set only grows with tau: costs are non-increasing."""
+
+    def test_flops_tasks_demand_monotone_in_tau(self):
+        a = PATTERNS["banded"](11)
+        b = PATTERNS["banded"](12)
+        taus = (0.0, 1e-6, 1e-4, 1e-2, 1e-1, 1.0)
+        flops, tasks, demand, bounds = [], [], [], []
+        for tau in taus:
+            sess = _session()
+            A, B = sess.from_dense(a), sess.from_dense(b)
+            n0 = len(sess.graph.nodes)
+            C = A.multiply(B, tau=tau)
+            flops.append(sess.flops)
+            tasks.append(sess.n_multiply_tasks)
+            demand.append(an.task_comm_demand(sess.graph, n0))
+            bounds.append(C.error_bound)
+        assert an.is_monotone_nonincreasing(flops)
+        assert an.is_monotone_nonincreasing(tasks)
+        assert an.is_monotone_nonincreasing(demand)
+        assert bounds == sorted(bounds)     # bound grows with tau
+        assert flops[-1] < flops[0]         # and the sweep visibly prunes
+        assert demand[-1] < demand[0]
+
+    def test_subtree_prune_covers_descendants_once(self):
+        """A high-level prune records one bound covering its subtree and
+        the result is NIL there (no descendant tasks registered)."""
+        a = PATTERNS["banded"](13)
+        sess = _session()
+        A = sess.from_dense(a)
+        C = A.multiply(A, tau=1e6)          # absurd tau: prune at the root
+        assert C.is_nil
+        rep = C.truncation
+        assert rep.pruned_subtrees == 1 and rep.pruned_leaf_pairs == 0
+        assert rep.pruned_by_level == {0: 1}
+        assert rep.error_bound == pytest.approx(
+            math.sqrt(A.norm2() * A.norm2()))
+        # no multiply tasks at all were registered
+        assert sess.n_multiply_tasks == 0
+
+
+class TestNormCacheMaintenance:
+    """Cached norms stay consistent through the maintained ops."""
+
+    def test_add_transpose_sym_square_norms_consistent(self):
+        a = PATTERNS["banded"](21)
+        b = PATTERNS["random"](22)
+        s = values_for_mask(random_symmetric_mask(N, 0.15, seed=23),
+                            seed=23, symmetric=True)
+        sess = _session()
+        A, B = sess.from_dense(a), sess.from_dense(b)
+        S = sess.from_dense(s, upper=True)
+        g = sess.graph
+        for M, dense in ((A + B, a + b),
+                         ((A.T + B), a.T + b),
+                         (S.sym_square(), s @ s),
+                         (A @ B, a @ b)):
+            want = float((dense * dense).sum())
+            assert qt_norm2(g, M.node) == pytest.approx(want, rel=1e-12)
+            # cached: the chunk now carries the value
+            root = g.value_of(M.node)
+            assert root.norm2 == pytest.approx(want, rel=1e-12)
+            # and a second read returns the cached value exactly
+            assert qt_norm2(g, M.node) == root.norm2
+
+    def test_leaf_transpose_carries_caches(self):
+        a = PATTERNS["banded"](24)[:LEAF_N, :LEAF_N]
+        leaf = LeafMatrix.from_dense(a, BS)
+        total = leaf.norm2()                        # populate caches
+        t = leaf.transpose()
+        assert t._norm2_tot == total                # maintained, not None
+        for (i, j), v in leaf._bnorm2.items():
+            assert t._bnorm2[(j, i)] == v
+        assert t.norm2() == pytest.approx(float((a * a).sum()))
+
+    def test_engine_fill_invalidates_placeholder_norms(self):
+        """Pallas placeholder leaves are zero until flush: norms read
+        after the wave fill must reflect the real data."""
+        a = PATTERNS["banded"](25)
+        b = PATTERNS["banded"](26)
+        sess = _session(engine="pallas")
+        C = sess.from_dense(a) @ sess.from_dense(b)
+        want = float(np.linalg.norm(a @ b) ** 2)
+        # frob2/norm2 flush first, then walk the (invalidated) caches
+        assert C.frob2() == pytest.approx(want, rel=1e-4)
+        assert C.norm2() == pytest.approx(want, rel=1e-4)
+
+    def test_truncated_multiply_of_computed_operand(self):
+        """Chained truncation: norms of an engine-produced operand are
+        read after its wave ran (the root-entry flush)."""
+        a = PATTERNS["banded"](27)
+        for engine in ("numpy", "pallas"):
+            sess = _session(engine=engine)
+            A = sess.from_dense(a)
+            AB = A @ A
+            C = AB.multiply(A, tau=1e-3)
+            exact_sess = _session(engine=engine)
+            E = exact_sess.from_dense(a)
+            exact = ((E @ E) @ E).to_dense()
+            err = float(np.linalg.norm(exact - C.to_dense()))
+            assert err <= C.error_bound + _err_slack(a @ a, a)
+
+    def test_unpack_blocks_invalidates(self):
+        from repro.core.leaf import alloc_structure, unpack_blocks
+        leaf = alloc_structure(LEAF_N, BS, [(0, 0), (1, 1)])
+        assert leaf.norm2() == 0.0                  # caches the zeros
+        unpack_blocks(leaf, [(0, 0), (1, 1)],
+                      np.ones((2, BS, BS)))
+        assert leaf.norm2() == pytest.approx(2.0 * BS * BS)
+
+
+def _leaf_chunk(a, bs=BS):
+    return MatrixChunk(a.shape[0], leaf=LeafMatrix.from_dense(a, bs))
+
+
+class TestChunkStoreNormCache:
+    """Satellite: no stale norm reads through dedup'd reuse and free."""
+
+    def test_norm_cached_and_freed(self):
+        a = PATTERNS["banded"](31)[:16, :16]
+        store = ChunkStore(2)
+        cid = store.register(0, _leaf_chunk(a))
+        want = float((a * a).sum())
+        assert store.norm2_of(cid) == pytest.approx(want)
+        assert store._norm2[(cid.owner, cid.local)] == pytest.approx(want)
+        store.free(cid)
+        assert (cid.owner, cid.local) not in store._norm2
+        assert store.norm2_of(None) == 0.0
+
+    def test_dedup_reuse_no_stale_norm(self):
+        a = PATTERNS["banded"](32)[:16, :16]
+        store = ChunkStore(1, dedup=True)
+        c1 = store.register(0, _leaf_chunk(a))
+        c2 = store.register(0, _leaf_chunk(a.copy()))    # dedup hit
+        assert c1 == c2
+        assert store.norm2_of(c1) == pytest.approx(float((a * a).sum()))
+        store.free(c1)                                    # refcount 2 -> 1
+        assert store.norm2_of(c1) == pytest.approx(float((a * a).sum()))
+        store.free(c1)                                    # data gone
+        assert (c1.owner, c1.local) not in store._norm2
+        # fingerprint slot released: new data gets a fresh id and norm
+        c3 = store.register(0, _leaf_chunk(2.0 * a))
+        assert c3 != c1
+        assert store.norm2_of(c3) == pytest.approx(4.0 * float((a * a).sum()))
+
+    def test_internal_chunks_opt_out(self):
+        store = ChunkStore(1)
+        cid = store.register(0, MatrixChunk(32, children=(None,) * 4))
+        assert store.norm2_of(cid) is None
