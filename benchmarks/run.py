@@ -32,6 +32,8 @@ BENCHES = [
      "Fig 14: HLO collective bytes, halo vs SpSUMMA"),
     ("bench_truncation", ["--out", "BENCH_truncation.json"],
      "SpAMM truncated multiply: flops/comm-vs-error tau sweep"),
+    ("bench_expr_reuse", ["--out", "BENCH_expr_reuse.json"],
+     "compiled-Plan reuse: flat purification iterations, <5% overhead"),
 ]
 
 QUICK = [
@@ -39,6 +41,8 @@ QUICK = [
      "quick runtime-simulator comm sweep (perf trajectory)"),
     ("bench_truncation", ["--quick", "--out", "BENCH_truncation.json"],
      "quick truncated-multiply tau sweep (error-vs-cost trajectory)"),
+    ("bench_expr_reuse", ["--quick", "--out", "BENCH_expr_reuse.json"],
+     "quick compiled-Plan reuse sweep (flat-iteration + overhead guard)"),
 ]
 
 

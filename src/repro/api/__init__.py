@@ -15,7 +15,12 @@ Everything compiles to the documented internal layer (``qt_*`` task
 programs over a raw ``CTGraph``) — see DESIGN.md for the mapping and
 README.md for the migration table from the free-function API.
 """
+from .expr import (Add, Expr, Input, MatMul, Scale, SymMul, SymSquare,
+                   Syrk, Transpose)
 from .matrix import Matrix
+from .plan import Plan
 from .session import PLACEMENT_ALIASES, Session
 
-__all__ = ["Session", "Matrix", "PLACEMENT_ALIASES"]
+__all__ = ["Session", "Matrix", "Plan", "PLACEMENT_ALIASES", "Expr",
+           "Input", "Transpose", "Scale", "Add", "MatMul", "SymSquare",
+           "Syrk", "SymMul"]

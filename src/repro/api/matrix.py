@@ -2,54 +2,82 @@
 
 A :class:`Matrix` wraps ``(session, root node id, QTParams)`` plus two
 bits of algebraic state — a **lazy transpose flag** and the symmetric
-**upper-storage** marker — and compiles every operation down to the
-documented internal ``qt_*`` task programs:
+**upper-storage** marker.  Operators no longer call the ``qt_*`` layer
+directly: every operation builds an :mod:`~repro.api.expr` node and hands
+it to the session, which lowers it through the rewrite pipeline of
+:mod:`repro.api.plan` —
 
-* ``C = A @ B``   → :func:`~repro.core.multiply.qt_multiply` with the
-  pending transpose flags folded into Algorithm 1's ``op(A) op(B)``;
-  a symmetric upper-storage operand routes to
-  :func:`~repro.core.multiply.qt_sym_multiply` automatically.
-* ``A + B``       → :func:`~repro.core.multiply.qt_add`; mismatched lazy
-  transposes materialise one side via
-  :func:`~repro.core.multiply.qt_transpose` first.
-* ``A.T``         → flips the lazy flag (no task); symmetric matrices
-  return themselves (A = Aᵀ).
-* ``A.sym_square()`` / ``A.syrk()`` / ``S.sym_multiply(B, side=...)`` —
-  the §3.3 symmetric task programs.
+* **eagerly** (``Session(lazy=False)``, default): at once, registering a
+  task program byte-identical to the pre-IR facade (pinned by
+  tests/test_api.py and tests/test_expr_plan.py);
+* **lazily** (``Session(lazy=True)``): on first readback, as a compiled,
+  cached, re-executable :class:`~repro.api.plan.Plan`.
 
-Readback (:meth:`to_dense`, :meth:`frob2`, :meth:`nnz_blocks`,
-:meth:`stats`) auto-flushes deferred Pallas leaf waves, so the handle is
-always safe to inspect.  NIL (all-zero) matrices are first-class: their
-root id is None and every operation short-circuits exactly as the
-fallback-execute semantics of Algorithms 1-2 prescribe.
+Operator surface:
+
+* ``C = A @ B`` / ``A.multiply(B, tau=)`` — Algorithm 1 with transpose
+  flags folded in; symmetric upper operands auto-route to sym_multiply.
+* ``A + B``, ``A - B`` — Algorithm 2 (subtraction lowers through the
+  ``scale`` task program).
+* ``alpha * A`` / ``A * alpha`` / ``-A`` — scalar scaling.
+* ``A.T`` — lazy flag (no task) on materialised handles, a folded
+  ``Transpose`` node on pending ones; symmetric matrices return self.
+* ``A.sym_square()`` / ``A.syrk()`` / ``S.sym_multiply(B, side=)`` — the
+  §3.3 symmetric task programs.  These are **untruncated**: a nonzero
+  effective tau (explicit or session default) raises instead of silently
+  computing an exact result (see :meth:`sym_square`).
+
+Readback (:meth:`to_dense`, :meth:`frob2`, :meth:`trace`,
+:meth:`nnz_blocks`, :meth:`stats`) forces pending expressions and flushes
+deferred Pallas leaf waves, so the handle is always safe to inspect.  NIL
+(all-zero) matrices are first-class: their root id is None and every
+operation short-circuits exactly as the fallback-execute semantics of
+Algorithms 1-2 prescribe.
 """
 from __future__ import annotations
 
+import numbers
 from typing import Optional
 
 import numpy as np
 
-from repro.core.multiply import (TruncationReport, qt_add, qt_multiply,
-                                 qt_sym_multiply, qt_sym_square, qt_syrk,
-                                 qt_transpose)
+from repro.core.multiply import TruncationReport
 from repro.core.quadtree import (QTParams, qt_frob2, qt_norm2, qt_stats,
-                                 qt_to_dense)
+                                 qt_to_dense, qt_trace)
+
+from .expr import (Add, Expr, Input, MatMul, Scale, SymMul, SymSquare,
+                   Syrk, Transpose, expr_upper)
+
+_SYM_TAU_ERROR = (
+    "{op}: the symmetric task programs are untruncated, but the effective "
+    "truncation threshold is tau={tau!r} ({src}); pass tau=0 explicitly "
+    "to compute exactly, or rebuild the operand as a plain (non-upper) "
+    "matrix for a truncated multiply")
+
+
+def _tau_src(explicit: bool) -> str:
+    return "passed explicitly" if explicit else "from the Session default"
 
 
 class Matrix:
     """Handle to a quadtree matrix registered in a session's task graph."""
 
-    __slots__ = ("session", "node", "params", "_t", "upper", "_trunc")
+    __slots__ = ("session", "node", "params", "_t", "upper", "_trunc",
+                 "_expr", "name", "_prog")
 
     def __init__(self, session, node: Optional[int], params: QTParams,
                  t: bool = False, upper: bool = False,
-                 trunc: Optional[TruncationReport] = None):
+                 trunc: Optional[TruncationReport] = None,
+                 expr: Optional[Expr] = None, name: Optional[str] = None):
         self.session = session
         self.node = node            # root chunk's node id; None == NIL
         self.params = params
         self._t = t and not upper   # symmetric storage: A == Aᵀ
         self.upper = upper
         self._trunc = trunc         # TruncationReport of the producing multiply
+        self._expr = expr           # pending Expr (lazy mode) or None
+        self.name = name            # plan input-slot name (rebinding)
+        self._prog = None           # eager producing-program nid range (free)
 
     # -- construction (delegates to the session) ----------------------------
     @classmethod
@@ -69,11 +97,20 @@ class Matrix:
         return self.params.n
 
     @property
+    def is_lazy(self) -> bool:
+        """True while this handle is an unevaluated expression."""
+        return self._expr is not None
+
+    @property
     def is_nil(self) -> bool:
         """True for the all-zero matrix (NIL chunk id at the root)."""
+        self._ensure()
         return self.session.graph.is_nil(self.node)
 
     def __repr__(self) -> str:
+        if self._expr is not None:
+            return (f"Matrix(n={self.n}, "
+                    f"lazy {type(self._expr).__name__} expression)")
         flags = "".join([".T" if self._t else "",
                          ", upper" if self.upper else "",
                          ", NIL" if self.node is None else ""])
@@ -88,27 +125,37 @@ class Matrix:
             raise ValueError(f"{op}: operand quadtree parameters differ "
                              f"({self.params} vs {other.params})")
 
-    def _materialized(self) -> Optional[int]:
-        """Root id with any pending lazy transpose materialised.
+    def _ensure(self) -> None:
+        """Force a pending expression (lazy mode) before readback."""
+        if self._expr is not None:
+            self.session._force(self)
 
-        Materialisations are cached per source node on the session, so a
-        reused ``.T`` handle registers the transpose task program once.
-        """
-        if not self._t:
-            return self.node
-        cache = self.session._transpose_cache
-        if self.node not in cache:
-            cache[self.node] = qt_transpose(self.session.graph,
-                                            self.params, self.node)
-        return cache[self.node]
+    def _as_expr(self) -> Expr:
+        """This handle as an Expr operand (pending state or bound input)."""
+        if self._expr is not None:
+            return self._expr
+        e: Expr = Input(self.node, self.params.n, self.upper)
+        return Transpose(e) if self._t else e
+
+    def _result(self, e: Expr) -> "Matrix":
+        """Hand a freshly-built op expression to the session."""
+        if self.session.lazy:
+            return Matrix(self.session, None, self.params,
+                          upper=expr_upper(e), expr=e)
+        return self.session._run_expr(e, self.params)
 
     # -- algebra -------------------------------------------------------------
     @property
     def T(self) -> "Matrix":
-        """Lazy transpose: flips a flag, registers no task.  The flag is
-        folded into the next multiply (Algorithm 1's op(A) op(B))."""
+        """Lazy transpose: flips a flag (materialised handles) or wraps a
+        folded ``Transpose`` node (pending ones); registers no task.  The
+        flag is folded into the next multiply (Algorithm 1's op(A) op(B)).
+        """
         if self.upper:
             return self             # symmetric: A == Aᵀ
+        if self._expr is not None:
+            return Matrix(self.session, None, self.params,
+                          expr=Transpose(self._expr))
         return Matrix(self.session, self.node, self.params, t=not self._t,
                       trunc=self._trunc)
 
@@ -130,12 +177,12 @@ class Matrix:
         :class:`~repro.core.multiply.TruncationReport`; read the
         worst-case ``||C_exact - C_tau||_F`` bound via
         :attr:`error_bound`.  ``tau=0`` registers a task graph identical
-        to the exact multiply.  Truncation applies to plain operands;
-        symmetric upper-storage operands route to ``sym_multiply``
-        untruncated (an explicit ``tau > 0`` then raises).
+        to the exact multiply.  Truncation applies to plain operands
+        only; symmetric upper-storage operands route to the *untruncated*
+        ``sym_multiply`` task program, so any nonzero effective tau —
+        explicit or the session default — raises.
         """
         self._check(other, "@")
-        g, p = self.session.graph, self.params
         explicit = tau is not None
         tau = float(self.session.tau if tau is None else tau)
         if self.upper and other.upper:
@@ -144,103 +191,131 @@ class Matrix:
                 "multiplies symmetric x plain (qt_sym_multiply). Rebuild "
                 "one operand without upper=True")
         if self.upper or other.upper:
-            if explicit and tau > 0.0:
+            if tau > 0.0:
                 raise ValueError(
                     "multiply(tau=...): truncation needs plain (non-upper) "
-                    "operands; sym_multiply is untruncated")
-            # a session-default tau routes silently to the untruncated
-            # symmetric task program
-            if self.upper:      # C = S B
-                nid = qt_sym_multiply(g, p, self.node,
-                                      other._materialized(), side="left")
-            else:               # C = B S
-                nid = qt_sym_multiply(g, p, other.node,
-                                      self._materialized(), side="right")
-            return Matrix(self.session, nid, p)
-        rep = TruncationReport(tau=tau)
-        if tau > 0.0:
-            nid = qt_multiply(g, p, self.node, other.node,
-                              ta=self._t, tb=other._t, tau=tau, trunc=rep)
-        else:
-            # tau == 0: exact path, byte-for-byte the same registrations
-            nid = qt_multiply(g, p, self.node, other.node,
-                              ta=self._t, tb=other._t)
-        return Matrix(self.session, nid, p, trunc=rep)
+                    "operands; " + _SYM_TAU_ERROR.format(
+                        op="sym_multiply", tau=tau,
+                        src=_tau_src(explicit)))
+            return self._result(MatMul(self._as_expr(), other._as_expr()))
+        return self._result(
+            MatMul(self._as_expr(), other._as_expr(), tau=tau))
 
     def __add__(self, other: "Matrix") -> "Matrix":
         self._check(other, "+")
         if self.upper != other.upper:
             raise ValueError("+: cannot mix symmetric upper storage and "
                              "plain matrices; rebuild one operand")
-        g, p = self.session.graph, self.params
-        if self._t == other._t:
-            nid = qt_add(g, p, self.node, other.node)
-            return Matrix(self.session, nid, p, t=self._t,
-                          upper=self.upper)
-        # op mismatch: addition has no op(A) slot — materialise transposes
-        nid = qt_add(g, p, self._materialized(), other._materialized())
-        return Matrix(self.session, nid, p, upper=self.upper)
+        return self._result(Add((self._as_expr(), other._as_expr())))
 
-    def sym_square(self) -> "Matrix":
+    def __sub__(self, other: "Matrix") -> "Matrix":
+        """C = A - B, lowered as A + (-1) * B (scale + add programs)."""
+        self._check(other, "-")
+        if self.upper != other.upper:
+            raise ValueError("-: cannot mix symmetric upper storage and "
+                             "plain matrices; rebuild one operand")
+        return self._result(
+            Add((self._as_expr(), Scale(-1.0, other._as_expr()))))
+
+    def __mul__(self, alpha) -> "Matrix":
+        """C = alpha * A for a scalar alpha (scale task program)."""
+        if not isinstance(alpha, numbers.Number):
+            return NotImplemented
+        return self._result(Scale(float(alpha), self._as_expr()))
+
+    __rmul__ = __mul__
+
+    def __neg__(self) -> "Matrix":
+        return self._result(Scale(-1.0, self._as_expr()))
+
+    def sym_square(self, tau: Optional[float] = None) -> "Matrix":
         """C = A² for symmetric A in upper storage (paper §3.3): half the
-        multiplies of a general product."""
+        multiplies of a general product.
+
+        The symmetric task programs are untruncated: if the session's
+        ``tau`` default is nonzero this raises unless ``tau=0`` is passed
+        explicitly — silently computing an exact result under a session
+        configured for truncation would misreport the error bound.
+        """
         if not self.upper:
             raise ValueError("sym_square needs symmetric upper storage: "
                              "build with from_dense(..., upper=True)")
-        nid = qt_sym_square(self.session.graph, self.params, self.node)
-        return Matrix(self.session, nid, self.params, upper=True)
+        self._check_sym_tau(tau, "sym_square")
+        return self._result(SymSquare(self._as_expr()))
 
-    def syrk(self, trans: bool = False) -> "Matrix":
-        """C = A Aᵀ (or Aᵀ A with ``trans=True``); C in upper storage."""
+    def syrk(self, trans: bool = False, tau: Optional[float] = None
+             ) -> "Matrix":
+        """C = A Aᵀ (or Aᵀ A with ``trans=True``); C in upper storage.
+        Untruncated — see :meth:`sym_square` for the tau contract."""
         if self.upper:
             raise ValueError("syrk of a symmetric matrix is sym_square")
-        nid = qt_syrk(self.session.graph, self.params, self.node,
-                      trans=trans != self._t)   # lazy .T folds into trans
-        return Matrix(self.session, nid, self.params, upper=True)
+        self._check_sym_tau(tau, "syrk")
+        return self._result(Syrk(self._as_expr(), trans=trans))
 
-    def sym_multiply(self, other: "Matrix", side: str = "left") -> "Matrix":
+    def sym_multiply(self, other: "Matrix", side: str = "left",
+                     tau: Optional[float] = None) -> "Matrix":
         """C = S B (``side="left"``) or B S (``side="right"``); self is the
-        symmetric upper-storage S."""
+        symmetric upper-storage S.  Untruncated — see :meth:`sym_square`
+        for the tau contract."""
         self._check(other, "sym_multiply")
         if not self.upper or other.upper:
             raise ValueError("sym_multiply: self must be symmetric upper "
                              "storage and other plain")
-        nid = qt_sym_multiply(self.session.graph, self.params, self.node,
-                              other._materialized(), side=side)
-        return Matrix(self.session, nid, self.params)
+        self._check_sym_tau(tau, "sym_multiply")
+        return self._result(
+            SymMul(self._as_expr(), other._as_expr(), side))
 
-    # -- readback (auto-flushes deferred engine waves) ----------------------
+    def _check_sym_tau(self, tau: Optional[float], op: str) -> None:
+        eff = float(self.session.tau if tau is None else tau)
+        if eff > 0.0:
+            raise ValueError(_SYM_TAU_ERROR.format(
+                op=op, tau=eff, src=_tau_src(tau is not None)))
+
+    # -- readback (forces lazy exprs, flushes deferred engine waves) ---------
     def to_dense(self) -> np.ndarray:
         """Dense numpy array (symmetric storage expands to the full
-        matrix); flushes pending Pallas waves first."""
+        matrix); forces pending expressions and flushes Pallas waves."""
+        self._ensure()
         d = qt_to_dense(self.session.graph, self.node, self.params)
         return np.ascontiguousarray(d.T) if self._t else d
 
     def frob2(self) -> float:
         """Squared Frobenius norm (transpose-invariant)."""
+        self._ensure()
         return qt_frob2(self.session.graph, self.node)
 
     def norm2(self) -> float:
         """Cached squared Frobenius norm (the SpAMM pruning quantity);
         numerically identical to :meth:`frob2`."""
+        self._ensure()
         return qt_norm2(self.session.graph, self.node)
+
+    def trace(self) -> float:
+        """Trace, via a cached leaf-level diagonal reduction
+        (:func:`~repro.core.quadtree.qt_trace`) — the SP2 purification
+        control quantity.  Transpose-invariant."""
+        self._ensure()
+        return qt_trace(self.session.graph, self.node)
 
     # -- truncation readback --------------------------------------------------
     @property
     def truncation(self) -> Optional[TruncationReport]:
         """The :class:`~repro.core.multiply.TruncationReport` of the
         multiply that produced this matrix, or None for other origins."""
+        self._ensure()
         return self._trunc
 
     @property
     def error_bound(self) -> float:
         """Worst-case ``||C_exact - C_tau||_F`` of the producing truncated
         multiply; 0.0 for exact results (tau=0 prunes nothing)."""
+        self._ensure()
         return self._trunc.error_bound if self._trunc is not None else 0.0
 
     def stats(self) -> dict:
         """Chunk/occupancy statistics of the quadtree (leaf chunks,
         internal chunks, nonzero blocks, bytes, depth)."""
+        self._ensure()
         self.session.flush()
         return qt_stats(self.session.graph, self.node)
 

@@ -1,0 +1,296 @@
+"""Plan: a compiled, cached, re-executable expression program.
+
+``Session.compile`` lowers a rewritten :class:`~repro.api.expr.Expr`
+through the documented ``qt_*`` task programs exactly once; the resulting
+:class:`Plan` then *replays* — ``plan.run(X=...)`` rebinds leaf inputs in
+place (:func:`~repro.core.quadtree.qt_rebind_dense` /
+:func:`~repro.core.quadtree.qt_rebind_from`) and re-executes the recorded
+program through the leaf engine (:func:`~repro.core.multiply.qt_replay`)
+**without registering a single task**.  That is the shape iterative
+electronic-structure work needs (density-matrix purification executes the
+same multiply structure every iteration): per-iteration graph size is
+constant instead of linear in the iteration count.
+
+Key invariants:
+
+* **Pinned lowering** — for a single-op expression the emitted task
+  program is identical (kinds, levels, schedule) to the eager facade's,
+  which is itself pinned graph-for-graph to the free-function layer.
+* **Structural identity** — a plan's cache key
+  (:func:`~repro.api.expr.fingerprint`) covers the expression shape,
+  per-node tau, the session's QTParams, every input's quadtree
+  structure, and the identity of the bound inputs (so no plan is ever
+  implicitly rebound to a matrix the caller didn't pass to ``run``).
+  Rebinding therefore never changes the program: new values must live
+  on the compiled structure (enforced by the rebind hooks).
+* **Frozen truncation** — a plan compiled with ``tau > 0`` freezes its
+  pruning decisions (subtree prunes are baked into the graph, leaf
+  block-pair lists are recorded on the nodes): replays re-run the same
+  program, and :attr:`reports` keeps the compile-time
+  :class:`~repro.core.multiply.TruncationReport`\\ s.
+* **In-place refresh** — a replay refreshes the *existing* output chunks.
+  Handles returned by earlier runs of the same plan observe the new
+  values (double-buffer semantics); read out what you need (a trace, a
+  dense copy) before re-running.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import numpy as np
+
+from repro.core.multiply import (TruncationReport, qt_add, qt_multiply,
+                                 qt_replay, qt_scale, qt_sym_multiply,
+                                 qt_sym_square, qt_syrk, qt_transpose)
+from repro.core.quadtree import (qt_invalidate_caches, qt_rebind_dense,
+                                 qt_rebind_from)
+
+from .expr import (Add, Expr, Input, MatMul, Scale, SymMul, SymSquare,
+                   Syrk, Transpose)
+
+__all__ = ["Plan", "lower"]
+
+
+def lower(session, expr: Expr, params, reports: list,
+          use_transpose_cache: bool = True) -> Optional[int]:
+    """Emit the ``qt_*`` task program of a rewritten expression.
+
+    Common subexpressions are lowered once (the memo below — structural
+    equality of the frozen dataclasses makes this a dict lookup).
+    ``use_transpose_cache=True`` (eager mode) shares materialised
+    transposes session-wide, preserving the eager facade's semantics;
+    plan compilation passes False so every task the plan depends on is
+    inside its replayed node range.
+    """
+    g = session.graph
+    memo: dict[Expr, Optional[int]] = {}
+    local_tcache: dict[Optional[int], Optional[int]] = {}
+
+    def transpose_of(src: Optional[int]) -> Optional[int]:
+        cache = (session._transpose_cache if use_transpose_cache
+                 else local_tcache)
+        if src not in cache:
+            cache[src] = qt_transpose(g, params, src)
+        return cache[src]
+
+    def go(e: Expr) -> Optional[int]:
+        if e in memo:
+            return memo[e]
+        if isinstance(e, Input):
+            nid = e.nid
+        elif isinstance(e, Transpose):
+            nid = transpose_of(go(e.a))
+        elif isinstance(e, Scale):
+            nid = qt_scale(g, params, go(e.a), e.alpha)
+        elif isinstance(e, Add):
+            nid = go(e.terms[0])
+            for t in e.terms[1:]:
+                nid = qt_add(g, params, nid, go(t))
+        elif isinstance(e, MatMul):
+            na, nb = go(e.a), go(e.b)
+            if e.tau > 0.0:
+                rep = TruncationReport(tau=e.tau)
+                reports.append(rep)
+                nid = qt_multiply(g, params, na, nb, ta=e.ta, tb=e.tb,
+                                  tau=e.tau, trunc=rep)
+            else:
+                reports.append(TruncationReport(tau=0.0))
+                nid = qt_multiply(g, params, na, nb, ta=e.ta, tb=e.tb)
+        elif isinstance(e, SymSquare):
+            nid = qt_sym_square(g, params, go(e.a))
+        elif isinstance(e, Syrk):
+            nid = qt_syrk(g, params, go(e.a), trans=e.trans)
+        elif isinstance(e, SymMul):
+            nid = qt_sym_multiply(g, params, go(e.s), go(e.b), side=e.side)
+        else:
+            raise TypeError(f"not an Expr: {e!r}")
+        memo[e] = nid
+        return nid
+
+    return go(expr)
+
+
+class Plan:
+    """One compiled expression: lowered once, re-executable forever.
+
+    Instances come from :meth:`Session.compile` (or implicitly from lazy
+    readback) and are cached on the session by structural fingerprint.
+    """
+
+    def __init__(self, session, expr: Expr, params, key: str,
+                 input_nids: list, names: list):
+        self.session = session
+        self.expr = expr                    # rewritten normal form
+        self.params = params
+        self.key = key
+        self.input_nids = list(input_nids)  # slot order
+        self.input_names = list(names)      # slot order, unique
+        self.reports: list[TruncationReport] = []
+        self.out_node: Optional[int] = None
+        self.out_t = False
+        self.out_upper = False
+        self.nodes: Optional[range] = None  # registered nid range
+        self.n_runs = 0
+
+    def __repr__(self) -> str:
+        state = (f"tasks={len(self.nodes)}" if self.nodes is not None
+                 else "uncompiled")
+        return (f"Plan(inputs={self.input_names}, runs={self.n_runs}, "
+                f"{state}, key={self.key[:10]})")
+
+    # -- execution ----------------------------------------------------------
+    def run(self, **bindings) -> "Matrix":
+        """Execute the program; returns the result handle.
+
+        Keyword arguments rebind input slots by name (the ``name=`` given
+        at matrix construction, else ``x0``, ``x1``, ... in first-use
+        order) to a dense array or a structure-identical :class:`Matrix`
+        — feeding a plan's own output back into an input slot is the
+        supported iteration idiom (values are copied before the replay
+        starts).  The first run lowers and executes the task program;
+        every later run registers **zero tasks**: it refreshes the leaf
+        inputs in place and replays the recorded program through the
+        leaf engine.
+        """
+        unknown = set(bindings) - set(self.input_names)
+        if unknown:
+            raise ValueError(
+                f"unknown plan input(s) {sorted(unknown)}; this plan binds "
+                f"{self.input_names}")
+        by_slot = {self.input_names.index(k): v for k, v in bindings.items()}
+        return self._run(by_slot)
+
+    def _run(self, by_slot: dict) -> "Matrix":
+        self._rebind(by_slot)
+        if self.nodes is None:
+            self._execute_first()
+        else:
+            self._replay()
+        self.n_runs += 1
+        return self._handle()
+
+    def _rebind(self, by_slot: dict) -> None:
+        g = self.session.graph
+        sched = self.session._sched
+        for slot, value in by_slot.items():
+            dst = self.input_nids[slot]
+            if value is None:
+                continue
+            if hasattr(value, "_ensure"):       # a Matrix handle
+                value._ensure()
+                if value.session is not self.session:
+                    raise ValueError(
+                        "plan rebind: operand belongs to a different "
+                        "Session")
+                if value._t:
+                    # honor a pending lazy transpose by rebinding the
+                    # transposed values (dense detour: no tasks, and the
+                    # support check still applies)
+                    qt_rebind_dense(g, dst, value.to_dense(), self.params)
+                elif value.node == dst:
+                    continue                    # already the bound input
+                else:
+                    qt_rebind_from(g, dst, value.node)
+            else:
+                qt_rebind_dense(g, dst, np.asarray(value), self.params)
+            if sched is not None and sched.store is not None:
+                # the simulator's per-chunk-id caches (norms, dedup
+                # fingerprints) are keyed to the old bytes; the rebound
+                # subtree's values changed under those ids
+                for nid in _subtree_nids(g, dst):
+                    sched.store.invalidate_content(
+                        sched.placement.get(nid))
+
+    def _execute_first(self) -> None:
+        sess, g = self.session, self.session.graph
+        n0 = len(g.nodes)
+        self.out_node = lower(sess, self.expr, self.params, self.reports,
+                              use_transpose_cache=False)
+        self.nodes = range(n0, len(g.nodes))
+
+    def _replay(self) -> None:
+        g = self.session.graph
+        qt_invalidate_caches(g, self.nodes)
+        qt_replay(g, self.nodes)
+        sched = self.session._sched
+        if sched is not None and sched.store is not None:
+            # program chunks already placed by an earlier simulate now
+            # hold refreshed values: retire their store-side norm/dedup
+            # caches (Scheduler.replay re-registers them at the next
+            # Plan.simulate, but other registrations may come first)
+            for nid in self.nodes:
+                sched.store.invalidate_content(sched.placement.get(nid))
+
+    def _handle(self) -> "Matrix":
+        from .matrix import Matrix
+        # eager parity: a handle carries a TruncationReport only when the
+        # *producing op* is the multiply — the root of the plan's
+        # rewritten expression.  Reports are appended post-order, so the
+        # root multiply's is last.  Per-product reports and the summed
+        # direct bound stay readable on the plan (reports / error_bound).
+        trunc = None
+        if isinstance(self.expr, MatMul) and self.reports:
+            trunc = self.reports[-1]
+        return Matrix(self.session, self.out_node, self.params,
+                      t=self.out_t, upper=self.out_upper, trunc=trunc)
+
+    # -- simulation ----------------------------------------------------------
+    def simulate(self, p: Optional[int] = None,
+                 placement: Optional[str] = None, fresh_stats: bool = True):
+        """Simulate the plan's program on the session's virtual cluster.
+
+        Both passes are restricted to the plan's own task program (plus
+        any genuinely unsimulated prerequisites, e.g. an input build
+        that was never simulated): other pending work — another
+        compiled-but-not-yet-simulated plan, unrelated eager tasks —
+        keeps its own report instead of being charged to this one.  The
+        first call simulates the program; later calls *replay* it
+        through :meth:`~repro.runtime.scheduler.Scheduler.replay` — the
+        program's previous chunk placements are released and the same
+        tasks run again, so each iteration of a purification loop gets
+        its own communication/makespan report against persistent input
+        placements.
+        """
+        sess, g = self.session, self.session.graph
+        sched = sess.scheduler
+        if self.nodes is None:
+            raise RuntimeError("plan not executed yet: call run() first")
+        if fresh_stats:
+            sched.reset_stats()
+        if sched.has_simulated(self.nodes):
+            return sched.replay(g, self.nodes)
+        from .session import _normalize_placement
+        placement = _normalize_placement(placement)
+        if sched.store is None:     # first-ever run: session defaults
+            p = p or sess.p
+            placement = placement or sess.placement
+        return sched.run(g, n_workers=p, placement=placement,
+                         only=sched.unsimulated_closure(g, self.nodes))
+
+    # -- reporting -----------------------------------------------------------
+    @property
+    def n_tasks(self) -> int:
+        """Tasks the compiled program registered (constant across runs)."""
+        return 0 if self.nodes is None else len(self.nodes)
+
+    @property
+    def error_bound(self) -> float:
+        """Summed worst-case truncation bound of all truncated products."""
+        return sum(r.error_bound for r in self.reports)
+
+
+def _subtree_nids(g, nid: Optional[int]) -> list:
+    """Resolved node ids of every chunk in a quadtree (root included)."""
+    out: list[int] = []
+
+    def walk(n: Optional[int]) -> None:
+        chunk = g.value_of(n)
+        if chunk is None:
+            return
+        out.append(g.resolve(n))
+        if chunk.children is not None:
+            for c in chunk.children:
+                walk(c)
+
+    walk(nid)
+    return out

@@ -20,27 +20,44 @@ paper experiment is a handful of lines::
     rep = sess.simulate(fresh_stats=True)   # measured multiply phase
     C.to_dense(), rep.max_bytes_received, rep.crit.length_s
 
-The facade *compiles to* the documented internal layer — the ``qt_*``
-free functions of :mod:`repro.core.quadtree` / :mod:`repro.core.multiply`
-— and adds no graph structure of its own, so the paper's eq (1) task
-counts and the numpy/pallas engine equivalence pin it exactly.
+Every operation lowers through the expression IR (:mod:`repro.api.expr`)
+onto the documented internal layer — the ``qt_*`` free functions of
+:mod:`repro.core.quadtree` / :mod:`repro.core.multiply` — and adds no
+graph structure of its own, so the paper's eq (1) task counts and the
+numpy/pallas engine equivalence pin it exactly.  ``lazy=True`` defers
+lowering to readback and reuses compiled :class:`~repro.api.plan.Plan`
+objects — the front end that iterative algorithms (SP2 purification)
+need::
+
+    sess = Session(lazy=True)
+    X = sess.from_dense(x0, name="X")
+    plan = sess.compile(X @ X)
+    Y = plan.run()                  # lowers + executes once
+    Y = plan.run(X=Y)               # rebinds + replays: zero new tasks
 """
 from __future__ import annotations
 
-from typing import Any, Callable, Optional
+from typing import Any, Callable, Optional, Union
 
 import numpy as np
 
-from repro.core.quadtree import QTParams, qt_from_coo, qt_from_dense
+from repro.core.engine import LeafEngine
+from repro.core.quadtree import (QTParams, qt_from_coo, qt_from_dense,
+                                 qt_structure_fp)
 from repro.core.tasks import CostModel, CTGraph
 from repro.runtime.scheduler import PLACEMENTS
 
+from .expr import (Expr, Transpose, expr_upper, fingerprint, rewrite)
 from .matrix import Matrix
+from .plan import Plan, lower
 
 #: accepted spellings of the scheduler placement policies: every canonical
 #: policy name passes through, plus shorthand aliases
 PLACEMENT_ALIASES = {p: p for p in PLACEMENTS}
 PLACEMENT_ALIASES.update({"parent": "parent-worker", "rr": "round-robin"})
+
+#: engine spec strings resolvable by :func:`repro.core.engine.make_engine`
+ENGINE_NAMES = ("numpy", "pallas")
 
 
 def _normalize_placement(placement: Optional[str]) -> Optional[str]:
@@ -54,6 +71,17 @@ def _normalize_placement(placement: Optional[str]) -> Optional[str]:
             f"{sorted(set(PLACEMENT_ALIASES.values()))}") from None
 
 
+def _validate_engine(engine: Any) -> Any:
+    """Fail fast on bad engine specs instead of at first leaf task."""
+    if engine is None or isinstance(engine, LeafEngine):
+        return engine
+    if isinstance(engine, str) and engine in ENGINE_NAMES:
+        return engine
+    raise ValueError(
+        f"unknown leaf engine spec: {engine!r}; pick one of "
+        f"{ENGINE_NAMES} or pass a LeafEngine instance")
+
+
 class Session:
     """Owns graph + engine + simulator behind one constructor.
 
@@ -63,7 +91,8 @@ class Session:
         cross-leaf batched kernel waves) or a
         :class:`~repro.core.engine.LeafEngine` instance.  One stateful
         engine instance serves one session/graph; rebinding raises
-        :class:`~repro.core.engine.EngineRebindError`.
+        :class:`~repro.core.engine.EngineRebindError`.  Unknown specs
+        raise here, not at the first leaf task.
     placement : default chunk placement for :meth:`simulate` —
         ``"parent"``/``"parent-worker"`` (the paper's locality model),
         ``"round-robin"`` or ``"random"``.
@@ -76,7 +105,14 @@ class Session:
         default 0.0 multiplies exactly; a positive tau prunes every
         recursive product with ``||A'||_F ||B'||_F < tau`` and records a
         worst-case error bound on the result
-        (:attr:`~repro.api.matrix.Matrix.error_bound`).
+        (:attr:`~repro.api.matrix.Matrix.error_bound`).  The symmetric
+        task programs are untruncated and *raise* under a nonzero
+        effective tau (see :meth:`Matrix.sym_square`).
+    lazy : ``False`` (default) lowers every operator call immediately —
+        the classic eager facade.  ``True`` builds expression DAGs
+        instead; readback (or :meth:`compile`) lowers them through the
+        rewrite pipeline and caches the compiled :class:`Plan` for
+        re-execution (DESIGN.md §6).
     cost, cache_bytes, seed, dedup : forwarded to the runtime
         :class:`~repro.runtime.scheduler.Scheduler` / chunk store
         (``dedup=True`` enables content-hash chunk deduplication).
@@ -87,8 +123,9 @@ class Session:
                  bs: int = 8, p: Optional[int] = None,
                  cost: Optional[CostModel] = None,
                  cache_bytes: int = 1 << 62, seed: int = 0,
-                 dedup: bool = False, tau: float = 0.0):
-        self.graph = CTGraph(engine=engine)
+                 dedup: bool = False, tau: float = 0.0,
+                 lazy: bool = False):
+        self.graph = CTGraph(engine=_validate_engine(engine))
         self.leaf_n = leaf_n
         self.bs = bs
         self.placement = _normalize_placement(placement)
@@ -98,16 +135,25 @@ class Session:
         self.seed = seed
         self.dedup = dedup
         self.tau = float(tau)
+        self.lazy = bool(lazy)
         self._sched = None
         # node id -> materialised-transpose node id, shared by all handles
         # so a reused lazy .T registers its task program only once
-        self._transpose_cache: dict[int, Optional[int]] = {}
+        self._transpose_cache: dict[Optional[int], Optional[int]] = {}
+        # compiled-plan cache: structural fingerprint -> Plan (DESIGN.md §6)
+        self._plans: dict[str, Plan] = {}
+        # node id -> quadtree structure fingerprint (structure is final at
+        # registration, so entries never go stale)
+        self._structfp: dict[Optional[int], str] = {}
+        # input root node id -> user-chosen plan slot name
+        self._input_names: dict[int, str] = {}
 
     def __repr__(self) -> str:
         eng = getattr(self.graph, "_engine_spec", None)
         eng = getattr(eng, "name", eng) or "numpy"
+        mode = ", lazy" if self.lazy else ""
         return (f"Session(engine={eng!r}, placement={self.placement!r}, "
-                f"leaf_n={self.leaf_n}, bs={self.bs}, "
+                f"leaf_n={self.leaf_n}, bs={self.bs}{mode}, "
                 f"tasks={len(self.graph.nodes)})")
 
     # -- matrix construction ------------------------------------------------
@@ -118,23 +164,29 @@ class Session:
 
     def from_dense(self, a: np.ndarray, upper: bool = False,
                    tol: float = 0.0, leaf_n: Optional[int] = None,
-                   bs: Optional[int] = None) -> Matrix:
-        """Build a quadtree matrix from a dense array (task program)."""
+                   bs: Optional[int] = None,
+                   name: Optional[str] = None) -> Matrix:
+        """Build a quadtree matrix from a dense array (task program).
+
+        ``name`` labels the matrix as a rebindable plan input slot:
+        ``plan.run(name=new_values)`` (DESIGN.md §6).
+        """
         a = np.asarray(a)
         params = self.params_for(a.shape[0], leaf_n, bs)
         nid = qt_from_dense(self.graph, a, params, upper=upper, tol=tol)
-        return Matrix(self, nid, params, upper=upper)
+        return self._register_input(nid, params, upper, name)
 
     def from_pattern(self, rows: np.ndarray, cols: np.ndarray, n: int,
                      value_fn: Optional[Callable] = None,
                      upper: bool = False, leaf_n: Optional[int] = None,
-                     bs: Optional[int] = None) -> Matrix:
+                     bs: Optional[int] = None,
+                     name: Optional[str] = None) -> Matrix:
         """Build from nonzero coordinates without a dense detour
         (:func:`~repro.core.quadtree.qt_from_coo`)."""
         params = self.params_for(n, leaf_n, bs)
         nid = qt_from_coo(self.graph, rows, cols, params,
                           value_fn=value_fn, upper=upper)
-        return Matrix(self, nid, params, upper=upper)
+        return self._register_input(nid, params, upper, name)
 
     def zeros(self, n: int, upper: bool = False,
               leaf_n: Optional[int] = None, bs: Optional[int] = None
@@ -142,6 +194,120 @@ class Session:
         """The all-zero (NIL) matrix of dimension n."""
         return Matrix(self, None, self.params_for(n, leaf_n, bs),
                       upper=upper)
+
+    def _register_input(self, nid: Optional[int], params: QTParams,
+                        upper: bool, name: Optional[str]) -> Matrix:
+        if name is not None and nid is not None:
+            self._input_names[nid] = name
+        return Matrix(self, nid, params, upper=upper, name=name)
+
+    # -- expression lowering (both modes) -----------------------------------
+    def _run_expr(self, e: Expr, params: QTParams) -> Matrix:
+        """Eager mode: rewrite + lower one operator call immediately.
+
+        Emits the identical ``qt_*`` registrations as the pre-IR facade:
+        single-op expressions are already in normal form, transposes
+        materialise through the session-wide cache, and a top-level
+        transpose peels into the handle's lazy flag instead of a task.
+        """
+        upper = expr_upper(e)
+        e = rewrite(e)
+        t = False
+        while isinstance(e, Transpose):
+            t, e = not t, e.a
+        reports: list = []
+        n0 = len(self.graph.nodes)
+        nid = lower(self, e, params, reports, use_transpose_cache=True)
+        trunc = reports[0] if len(reports) == 1 else None
+        m = Matrix(self, nid, params, t=t, upper=upper, trunc=trunc)
+        # the producing program's nid range: lets Session.free release the
+        # program's intermediate chunks (consumed multiply/add partials),
+        # not just the result tree
+        m._prog = range(n0, len(self.graph.nodes))
+        return m
+
+    def compile(self, target: Union[Matrix, Expr]) -> Plan:
+        """Compile an expression into a cached, re-executable :class:`Plan`.
+
+        ``target`` is a lazy (pending) :class:`Matrix` — the natural way
+        to spell an expression, ``sess.compile(X @ X + C)`` — or a raw
+        :class:`~repro.api.expr.Expr`.  Plans are cached by structural
+        fingerprint (expression shape + QTParams + operand sparsity
+        structure + per-node tau) *plus the identity of the bound
+        inputs*: compiling the same expression twice returns the same
+        plan, and running it again replays the recorded program with
+        rebound inputs instead of registering new tasks.  Input identity
+        is part of the key so that no plan ever rebinds a matrix the
+        caller didn't pass to ``run`` — values move between iterations
+        only through explicit ``plan.run(name=...)`` bindings.
+        """
+        if isinstance(target, Matrix):
+            if target.session is not self:
+                raise ValueError("compile: matrix belongs to a different "
+                                 "Session")
+            if target._expr is None:
+                raise ValueError(
+                    "compile: matrix is already materialised — build the "
+                    "expression in a Session(lazy=True), e.g. "
+                    "plan = sess.compile(X @ X)")
+            e, params = target._expr, target.params
+        elif isinstance(target, Expr):
+            e = target
+            inputs = _first_input_n(e)
+            params = self.params_for(inputs)
+        else:
+            raise TypeError(f"compile: expected a Matrix or Expr, got "
+                            f"{type(target)!r}")
+        plan, _ = self._compile_expr(e, params)
+        return plan
+
+    def _compile_expr(self, e: Expr, params: QTParams
+                      ) -> tuple[Plan, list]:
+        upper = expr_upper(e)
+        e = rewrite(e)
+        t = False
+        while isinstance(e, Transpose):
+            t, e = not t, e.a
+        key, slot_nids = fingerprint(e, self._structure_fp, params)
+        # input identity is part of the cache key: a structurally
+        # identical expression over *different* matrices compiles its own
+        # program instead of silently rebinding (and overwriting) the
+        # first plan's input chunks
+        key = f"{key}:t{int(t)}:b{tuple(slot_nids)}"
+        plan = self._plans.get(key)
+        if plan is None:
+            names: list = []
+            for slot, nid in enumerate(slot_nids):
+                name = self._input_names.get(nid, f"x{slot}")
+                while name in names:    # keep every slot name bindable
+                    name += "_"
+                names.append(name)
+            plan = Plan(self, e, params, key, slot_nids, names)
+            plan.out_t = t
+            plan.out_upper = upper
+            self._plans[key] = plan
+        return plan, slot_nids
+
+    def _force(self, m: Matrix) -> None:
+        """Materialise a pending lazy matrix through the plan cache.
+
+        The cache key includes input identity, so a hit always has the
+        expression's own inputs bound: forcing replays the recorded
+        program against their *current* values and never rebinds (or
+        overwrites) anything.  The plan's output chunks are refreshed in
+        place, so handles from earlier runs of the same plan observe the
+        new values.
+        """
+        plan, _ = self._compile_expr(m._expr, m.params)
+        out = plan._run({})
+        m.node, m._t, m._trunc = out.node, out._t, out._trunc
+        m._expr = None
+
+    def _structure_fp(self, nid: Optional[int]) -> str:
+        fp = self._structfp.get(nid)
+        if fp is None:
+            fp = self._structfp[nid] = qt_structure_fp(self.graph, nid)
+        return fp
 
     # -- execution ----------------------------------------------------------
     def flush(self) -> None:
@@ -169,7 +335,9 @@ class Session:
         counters first so the returned
         :class:`~repro.runtime.scheduler.SimReport` isolates this phase's
         communication.  ``p``/``placement`` default to the session's and
-        are pinned by the first call.
+        are pinned by the first call.  To re-simulate a compiled plan's
+        fixed program use :meth:`Plan.simulate`, which replays through
+        :meth:`~repro.runtime.scheduler.Scheduler.replay`.
         """
         sched = self.scheduler
         if fresh_stats:
@@ -183,6 +351,54 @@ class Session:
     def reset_stats(self) -> None:
         """Zero per-worker comm counters; placements persist (§7)."""
         self.scheduler.reset_stats()
+
+    def free(self, matrix: Matrix) -> int:
+        """Release a consumed matrix's chunks from the simulated store.
+
+        Long iterative runs otherwise leak every intermediate into the
+        :class:`~repro.core.chunks.ChunkStore` (owned-bytes accounting
+        grows without bound).  Frees every chunk this session's scheduler
+        placed for (a) the matrix's quadtree and (b) the task program
+        that produced it — the consumed multiply/add partials that are
+        not part of the result tree — and drops their placement entries;
+        returns the number of owned bytes released.  With ``dedup=True``
+        frees are reference counted — content shared with a live
+        registration survives.  Without dedup, substructure shared
+        through identifier-copy aliasing (e.g. an add with a NIL operand
+        returns the other operand's chunks) is freed too, so only free
+        matrices whose values you no longer read.  Compiled plans manage
+        their own program chunks (:meth:`Plan.simulate` frees and
+        re-places them per replay); :meth:`free` is for eager loops and
+        consumed inputs.
+        """
+        if not isinstance(matrix, Matrix):
+            raise TypeError(f"free: expected a Matrix, got {type(matrix)!r}")
+        if matrix._expr is not None:
+            return 0                    # never materialised: nothing placed
+        sched = self._sched
+        if sched is None or sched.store is None:
+            return 0
+        from .plan import _subtree_nids
+        targets = set(_subtree_nids(self.graph, matrix.node))
+        targets.update(matrix._prog or ())
+        # materialised transposes are shared session-wide through
+        # _transpose_cache (an eager program that registered one may not
+        # be its only consumer): keep their chunks and placements
+        for tnid in self._transpose_cache.values():
+            if tnid is not None:
+                targets.difference_update(
+                    _subtree_nids(self.graph, tnid))
+        before = sum(s.owned_bytes for s in sched.store.stats)
+        sched.release(self.graph, targets)
+        # alias entries (identifier copies) pointing into the freed
+        # chunks.  This scans the full placement map — an identity test,
+        # deliberately not a chunk-id test, so dedup-shared cids owned by
+        # other live matrices keep their entries; O(placements) per free
+        # is fine for the simulator's bookkeeping.
+        for k in [k for k, _ in list(sched.placement.items())
+                  if self.graph.resolve(k) in targets]:
+            sched.placement.pop(k, None)
+        return before - sum(s.owned_bytes for s in sched.store.stats)
 
     # -- reporting ----------------------------------------------------------
     def task_counts(self) -> dict[str, int]:
@@ -213,3 +429,11 @@ class Session:
         """Leaf-engine report (batched waves, padding, kernel wall time)."""
         self.flush()
         return self.graph.engine.stats()
+
+
+def _first_input_n(e: Expr) -> int:
+    from .expr import expr_inputs
+    inputs = expr_inputs(e)
+    if not inputs:
+        raise ValueError("compile: expression has no inputs")
+    return inputs[0].n

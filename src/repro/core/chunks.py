@@ -262,6 +262,35 @@ class ChunkStore:
                 self._norm2[key] = v
         return v
 
+    def invalidate_norm2(self, cid: Optional[ChunkId]) -> None:
+        """Drop the cached norm of a chunk whose payload was rebound.
+
+        Plan replay (api/plan.py) refreshes input chunk *values* in place
+        — same structure, same bytes count, new numbers — so any norm
+        this store cached against the old bytes is stale.
+        """
+        if cid is None:
+            return
+        self._norm2.pop((cid.owner, cid.local), None)
+
+    def invalidate_content(self, cid: Optional[ChunkId]) -> None:
+        """Drop every cache keyed to a rebound chunk's *old bytes*.
+
+        Beyond the norm cache this retires the chunk's dedup fingerprint:
+        a later registration of data byte-identical to the original
+        values must not resolve to a chunk that now holds different
+        numbers.  The refcount bookkeeping stays intact (``free`` still
+        works); only future fingerprint lookups are prevented — the
+        rebound bytes are conservatively left unindexed.
+        """
+        if cid is None:
+            return
+        key = (cid.owner, cid.local)
+        self._norm2.pop(key, None)
+        fp = self._fp_of.get(key)
+        if fp is not None and self._by_fp.get(fp) == key:
+            del self._by_fp[fp]
+
     def free(self, cid: Optional[ChunkId]) -> None:
         """Model chunk deletion (temporaries freed by the library user).
 

@@ -47,8 +47,8 @@ from typing import Any, Optional
 import numpy as np
 
 from .leaf import (LeafMatrix, LeafStats, alloc_structure, leaf_add,
-                   leaf_multiply, leaf_sym_multiply, leaf_sym_square,
-                   leaf_syrk, unpack_blocks)
+                   leaf_multiply, leaf_scale, leaf_sym_multiply,
+                   leaf_sym_square, leaf_syrk, unpack_blocks)
 from .quadtree import MatrixChunk
 
 
@@ -60,7 +60,7 @@ class LeafPayload:
     engine resolves them to chunks at execution time.  Only the fields
     relevant to ``kind`` are meaningful.
     """
-    kind: str       # multiply|sym_square|syrk|sym_multiply|add|transpose
+    kind: str       # multiply|sym_square|syrk|sym_multiply|add|transpose|scale
     a: Optional[int] = None
     b: Optional[int] = None
     ta: bool = False                # multiply: transpose A
@@ -68,6 +68,7 @@ class LeafPayload:
     trans: bool = False             # syrk: A^T A instead of A A^T
     side: str = "left"              # sym_multiply: S B vs B S
     tau: float = 0.0                # multiply: SpAMM block-pair threshold
+    alpha: float = 1.0              # scale: C = alpha * A
     # TruncationReport accumulating pruned-pair bounds; excluded from
     # eq/hash (it is an accumulator identity, not part of the task's value)
     trunc: Any = dataclasses.field(default=None, compare=False)
@@ -90,6 +91,19 @@ class LeafEngine:
 
     def execute(self, g, node, payload: LeafPayload) -> Optional[MatrixChunk]:
         """Execute (or defer) one leaf task; returns its chunk or None=NIL."""
+        raise NotImplementedError
+
+    def reexecute(self, g, node, payload: LeafPayload) -> None:
+        """Recompute an already-executed leaf task's numbers *in place*.
+
+        Compiled-Plan replay (api/plan.py): the task's output chunk
+        already exists with its final block structure; only the numbers
+        are refreshed from the (rebound) operand chunks.  Must register
+        no tasks and allocate no chunks.  Truncated multiplies replay the
+        block-pair list frozen on ``node.replay`` at first execution so
+        the program — not the norms of the new values — decides the
+        structure.
+        """
         raise NotImplementedError
 
     def flush(self, g) -> None:
@@ -248,17 +262,20 @@ class NumpyEngine(LeafEngine):
 
     name = "numpy"
 
-    def execute(self, g, node, payload: LeafPayload) -> Optional[MatrixChunk]:
-        av: MatrixChunk = g.value_of(payload.a)
-        bv: Optional[MatrixChunk] = (
-            g.value_of(payload.b) if payload.b is not None else None)
-        st = LeafStats()
+    def _compute(self, g, node, payload: LeafPayload,
+                 av: MatrixChunk, bv: Optional[MatrixChunk], st: LeafStats
+                 ) -> tuple[LeafMatrix, bool]:
+        """The numeric work of one leaf task; shared by execute/reexecute."""
         k = payload.kind
         if k == "multiply" and payload.tau > 0.0:
             # truncated path: structure (incl. SpAMM pair pruning) comes
             # from leaf_task_pairs — identical to the pallas backend's —
-            # and the surviving pairs are evaluated with the host library
-            pairs, upper = leaf_task_pairs(payload, av.leaf, bv.leaf)
+            # and the surviving pairs are evaluated with the host library.
+            # The pair list is frozen on the node so a Plan replay re-runs
+            # the same program instead of re-pruning against new norms.
+            if node.replay is None:
+                node.replay = leaf_task_pairs(payload, av.leaf, bv.leaf)
+            pairs, upper = node.replay
             res = execute_pairs_host(av.leaf, bv.leaf, pairs, upper, st)
         elif k == "multiply":
             res = leaf_multiply(av.leaf, bv.leaf, ta=payload.ta,
@@ -280,15 +297,44 @@ class NumpyEngine(LeafEngine):
         elif k == "transpose":
             res = av.leaf.transpose()
             upper = False
+        elif k == "scale":
+            res = leaf_scale(av.leaf, payload.alpha)
+            upper = av.upper
         else:
             raise ValueError(f"unknown leaf payload kind: {k}")
+        return res, upper
+
+    def execute(self, g, node, payload: LeafPayload) -> Optional[MatrixChunk]:
+        av: MatrixChunk = g.value_of(payload.a)
+        bv: Optional[MatrixChunk] = (
+            g.value_of(payload.b) if payload.b is not None else None)
+        st = LeafStats()
+        res, upper = self._compute(g, node, payload, av, bv, st)
         node.flops = st.flops
         # multiply kinds prune structurally-empty results to NIL; adds of
         # two non-NIL leaves always produce a chunk (Alg 2 semantics) —
         # matching the pallas backend's structural behavior exactly
-        if k not in ("add", "transpose") and res.is_zero():
+        if payload.kind not in ("add", "transpose", "scale") \
+                and res.is_zero():
             return None
         return MatrixChunk(av.n, leaf=res, upper=upper)
+
+    def reexecute(self, g, node, payload: LeafPayload) -> None:
+        av: MatrixChunk = g.value_of(payload.a)
+        bv: Optional[MatrixChunk] = (
+            g.value_of(payload.b) if payload.b is not None else None)
+        res, _ = self._compute(g, node, payload, av, bv, LeafStats())
+        out: MatrixChunk = g.value_of(node.nid)
+        dst = out.leaf
+        if set(res.blocks) != set(dst.blocks):   # pragma: no cover - guard
+            raise RuntimeError(
+                "replay structure drift: leaf block occupancy changed "
+                "between plan compilation and replay")
+        for key, blk in res.blocks.items():
+            dst.blocks[key][...] = blk
+        dst.invalidate_norms()
+        out.norm2 = None
+        out.trace = None
 
 
 # ---------------------------------------------------------------------------
@@ -383,7 +429,18 @@ class PallasEngine(LeafEngine):
             self._defer(_Pending(node.nid, payload, out, a_leaf, None))
             return MatrixChunk(av.n, leaf=out)
 
+        if payload.kind == "scale":
+            # host-side like add/transpose: same structure, scaled numbers
+            out = alloc_structure(a_leaf.n, a_leaf.bs, list(a_leaf.blocks),
+                                  upper=a_leaf.upper, dtype=a_leaf.dtype)
+            self._defer(_Pending(node.nid, payload, out, a_leaf, None))
+            return MatrixChunk(av.n, leaf=out, upper=av.upper)
+
         pairs, upper = leaf_task_pairs(payload, a_leaf, b_leaf)
+        if payload.tau > 0.0:
+            # freeze the surviving pairs for Plan replay (see qt_replay):
+            # the norm test must not re-evaluate against rebound values
+            node.replay = (pairs, upper)
         node.flops = 2.0 * len(pairs) * a_leaf.bs ** 3
         # output occupancy in row-major slot order (the same order
         # bsmm.compute_c_structure assigns; see validate_structure)
@@ -498,7 +555,7 @@ class PallasEngine(LeafEngine):
         # kernel failure leaves the deferred work intact and a later flush
         # retries it (block fills are idempotent in-place assignments)
         self._bind(g)
-        host_kinds = ("add", "transpose")
+        host_kinds = ("add", "transpose", "scale")
         while self._pending:
             wave = [t for t in self._pending
                     if t.payload.kind not in host_kinds and self._ready(t)]
@@ -510,6 +567,8 @@ class PallasEngine(LeafEngine):
                 if t.payload.kind in host_kinds and self._ready(t):
                     if t.payload.kind == "add":
                         self._run_add(t)
+                    elif t.payload.kind == "scale":
+                        self._run_scale(t)
                     else:
                         self._run_transpose(t)
                     self._unfilled.discard(id(t.out))
@@ -539,6 +598,41 @@ class PallasEngine(LeafEngine):
         for (i, j), blk in t.a_leaf.blocks.items():
             t.out.blocks[(j, i)][...] = blk.T
         t.out.invalidate_norms()
+
+    @staticmethod
+    def _run_scale(t: _Pending) -> None:
+        for key, blk in t.a_leaf.blocks.items():
+            np.multiply(blk, t.payload.alpha, out=t.out.blocks[key],
+                        casting="unsafe")
+        t.out.invalidate_norms()
+
+    def reexecute(self, g, node, payload: LeafPayload) -> None:
+        """Re-defer an already-executed leaf task against its existing
+        output chunk; the next flush re-runs the batched waves/host fills
+        in dependency order, writing the same placeholder blocks."""
+        self._bind(g)
+        av: MatrixChunk = g.value_of(payload.a)
+        bv: Optional[MatrixChunk] = (
+            g.value_of(payload.b) if payload.b is not None else None)
+        a_leaf = av.leaf
+        b_leaf = bv.leaf if bv is not None else None
+        out: MatrixChunk = g.value_of(node.nid)
+        if payload.kind in ("add", "transpose", "scale"):
+            self._defer(_Pending(node.nid, payload, out.leaf, a_leaf,
+                                 b_leaf))
+        else:
+            if payload.tau > 0.0:
+                pairs, _ = node.replay      # frozen at first execution
+            else:
+                probe = dataclasses.replace(payload, trunc=None)
+                pairs, _ = leaf_task_pairs(probe, a_leaf, b_leaf)
+            # zero first: waves only scatter-add into surviving out slots
+            for blk in out.leaf.blocks.values():
+                blk[...] = 0.0
+            self._defer(_Pending(node.nid, payload, out.leaf, a_leaf,
+                                 b_leaf, pairs))
+        out.norm2 = None
+        out.trace = None
 
     def _run_wave(self, wave: list[_Pending]) -> None:
         groups: dict[int, list[_Pending]] = {}

@@ -46,7 +46,7 @@ class LeafMatrix:
     """
 
     __slots__ = ("n", "bs", "blocks", "upper", "dtype",
-                 "_bnorm2", "_norm2_tot")
+                 "_bnorm2", "_norm2_tot", "_trace")
 
     def __init__(self, n: int, bs: int, blocks: Optional[dict] = None,
                  upper: bool = False, dtype=np.float64):
@@ -58,9 +58,11 @@ class LeafMatrix:
         self.dtype = dtype
         # squared-Frobenius norm caches (per stored block + total), filled
         # lazily and dropped by invalidate_norms() whenever block data is
-        # mutated in place (engine wave fills, deferred adds/transposes)
+        # mutated in place (engine wave fills, deferred adds/transposes);
+        # the trace cache follows the same lifecycle
         self._bnorm2: Optional[dict[tuple[int, int], float]] = None
         self._norm2_tot: Optional[float] = None
+        self._trace: Optional[float] = None
 
     # -- construction -------------------------------------------------------
     @classmethod
@@ -143,10 +145,23 @@ class LeafMatrix:
                 sum(self.block_norm2(k) for k in self.blocks))
         return self._norm2_tot
 
+    def trace(self) -> float:
+        """Trace of the leaf, cached like :meth:`norm2`.
+
+        Only diagonal blocks contribute; for upper-triangular storage the
+        diagonal blocks are stored full, so the same reduction applies.
+        """
+        if self._trace is None:
+            self._trace = float(sum(
+                np.trace(blk) for (i, j), blk in self.blocks.items()
+                if i == j))
+        return self._trace
+
     def invalidate_norms(self) -> None:
-        """Drop norm caches after in-place mutation of block data."""
+        """Drop norm/trace caches after in-place mutation of block data."""
         self._bnorm2 = None
         self._norm2_tot = None
+        self._trace = None
 
     def frob2(self) -> float:
         return self.norm2()

@@ -231,15 +231,75 @@ def qt_transpose(g: CTGraph, params: QTParams, a: Optional[int]
         cids = (qt_transpose(g, params, c00), qt_transpose(g, params, c10),
                 qt_transpose(g, params, c01), qt_transpose(g, params, c11))
         created = _register_create(g, av.n, cids, False, level)
-        if created is not None and av.norm2 is not None:
-            # the Frobenius norm is transpose-invariant: maintain the
-            # cache instead of recomputing it on the result subtree
-            g.value_of(created).norm2 = av.norm2
+        if created is not None:
+            if av.norm2 is not None:
+                # the Frobenius norm is transpose-invariant: maintain the
+                # cache instead of recomputing it on the result subtree
+                g.value_of(created).norm2 = av.norm2
+            if av.trace is not None:    # so is the trace
+                g.value_of(created).trace = av.trace
         return Alias(created)
 
     nid = g.register_task("transpose", fn, [Dep(a)])
     g.nodes[nid].level = level
     return nid
+
+
+def qt_scale(g: CTGraph, params: QTParams, a: Optional[int], alpha: float
+             ) -> Optional[int]:
+    """C = alpha * A (facade satellite: scalar algebra for SP2-style loops).
+
+    ``alpha == 1`` is an identifier copy (no task, no new chunk) and
+    ``alpha == 0`` is structurally NIL, mirroring the NIL short-circuits
+    of Algorithms 1-2.  Internal levels are identifier shuffling
+    (create-from-ids); leaf scaling is dispatched through the leaf engine
+    so deferred backends order it after the waves filling its input.
+    Storage flags (symmetric upper) are preserved.
+    """
+    if g.is_nil(a) or alpha == 0.0:
+        return None
+    if alpha == 1.0:
+        return a
+    ac: MatrixChunk = g.value_of(a)
+    level = _level_of(params, ac.n)
+
+    if ac.is_leaf:
+        nid = g.register_task("scale", None, [Dep(a)],
+                              payload=LeafPayload("scale", a=a, alpha=alpha))
+        g.nodes[nid].level = level
+        return nid
+
+    def fn(av: MatrixChunk):
+        cids = tuple(qt_scale(g, params, c, alpha) for c in av.children)
+        created = _register_create(g, av.n, cids, av.upper, level)
+        if created is not None and av.norm2 is not None:
+            # ||alpha A||_F^2 = alpha^2 ||A||_F^2: maintain the cache
+            g.value_of(created).norm2 = av.norm2 * alpha * alpha
+        return Alias(created)
+
+    nid = g.register_task("scale", fn, [Dep(a)])
+    g.nodes[nid].level = level
+    return nid
+
+
+def qt_replay(g: CTGraph, nids) -> None:
+    """Re-execute the numeric work of an already-registered task program.
+
+    ``nids`` is the (ascending) node-id range a compiled Plan registered.
+    Registration order is dependency order for leaf payload tasks (their
+    operand ids always precede them), so one forward sweep re-dispatches
+    every payload task through the graph's leaf engine —
+    :meth:`~repro.core.engine.LeafEngine.reexecute` fills the *existing*
+    chunks in place, registering nothing — and a final flush runs the
+    deferred backends' batched waves.  Structural nodes (creates,
+    recursion containers, aliases) hold only identifiers and need no
+    recomputation.
+    """
+    for nid in nids:
+        node = g.nodes[nid]
+        if node.payload is not None and node.value is not None:
+            g.engine.reexecute(g, node, node.payload)
+    g.flush()
 
 
 def qt_sym_square(g: CTGraph, params: QTParams, a: Optional[int]

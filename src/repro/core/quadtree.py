@@ -48,7 +48,7 @@ class QTParams(Chunk):
 class MatrixChunk(Chunk):
     """Basic matrix chunk (§3.1): leaf payload or 4 child chunk identifiers."""
 
-    __slots__ = ("n", "leaf", "children", "upper", "norm2")
+    __slots__ = ("n", "leaf", "children", "upper", "norm2", "trace")
 
     def __init__(self, n: int, leaf: Optional[LeafMatrix] = None,
                  children: Optional[tuple] = None, upper: bool = False):
@@ -60,8 +60,12 @@ class MatrixChunk(Chunk):
         # submatrix this chunk roots; None until computed by qt_norm2.
         # Chunk contents are write-once (placeholder leaves are filled
         # exactly once by an engine flush), so a value computed after a
-        # flush stays valid for the chunk's lifetime.
+        # flush stays valid for the chunk's lifetime — until a Plan
+        # rebind/replay (api/plan.py) refreshes the values in place, which
+        # drops these caches through qt_invalidate_caches.  The trace
+        # cache follows the same rules.
         self.norm2: Optional[float] = None
+        self.trace: Optional[float] = None
 
     @property
     def is_leaf(self) -> bool:
@@ -310,6 +314,199 @@ def _norm2(g: CTGraph, nid: Optional[int]) -> float:
             tot += w
     chunk.norm2 = tot
     return tot
+
+
+def qt_trace(g: CTGraph, nid: Optional[int]) -> float:
+    """Trace of a quadtree matrix, cached at every node like qt_norm2.
+
+    Only the diagonal path (c00/c11 at every level) is walked; symmetric
+    upper storage needs no special casing because the diagonal quadrants
+    are stored and diagonal leaf blocks are kept full.
+    """
+    g.flush()   # deferred leaf waves must have filled block data
+    return _trace(g, nid)
+
+
+def _trace(g: CTGraph, nid: Optional[int]) -> float:
+    chunk: Optional[MatrixChunk] = g.value_of(nid)
+    if chunk is None:
+        return 0.0
+    if chunk.trace is not None:
+        return chunk.trace
+    if chunk.is_leaf:
+        tot = chunk.leaf.trace()
+    else:
+        tot = _trace(g, chunk.child(0, 0)) + _trace(g, chunk.child(1, 1))
+    chunk.trace = tot
+    return tot
+
+
+# ---------------------------------------------------------------------------
+# Input rebinding (compiled-Plan re-execution, api/plan.py)
+#
+# A Plan replays a fixed task program against *refreshed input values*: the
+# quadtree structure — NIL pattern, leaf block occupancy — is part of the
+# plan's fingerprint and must not change, so rebinding is an in-place fill
+# of the existing leaf blocks plus cache invalidation.  No tasks are
+# registered and no chunks are created.
+# ---------------------------------------------------------------------------
+
+def qt_rebind_dense(g: CTGraph, nid: Optional[int], a: np.ndarray,
+                    params: QTParams) -> None:
+    """Refill a built quadtree's leaf values from a dense array, in place.
+
+    ``a`` must be supported on the tree's existing structure: any entry
+    outside a stored leaf block (or inside a NIL subtree) must be zero —
+    structure changes need a fresh matrix (and a fresh plan).  For
+    symmetric upper storage pass the full symmetric matrix, exactly as
+    :func:`qt_from_dense` expects.
+    """
+    a = np.asarray(a)
+    assert a.shape == (params.n, params.n)
+    g.flush()   # placeholder leaves must be final before we overwrite them
+
+    def fill(nid: Optional[int], sub: np.ndarray) -> None:
+        chunk: Optional[MatrixChunk] = g.value_of(nid)
+        if chunk is None:
+            if np.any(sub != 0.0):
+                raise ValueError(
+                    "rebind structure mismatch: new values are nonzero "
+                    "inside a NIL subtree of the compiled input; build a "
+                    "new matrix (and plan) for a different sparsity "
+                    "structure")
+            return
+        if chunk.is_leaf:
+            lf = chunk.leaf
+            bs = lf.bs
+            if lf.upper:
+                # stored support is the upper block triangle; values in
+                # an unstored upper block are a structure change (the
+                # strictly-lower data is its transpose by construction)
+                grid = lf.n // bs
+                for bi in range(grid):
+                    for bj in range(bi, grid):
+                        blk = sub[bi * bs:(bi + 1) * bs,
+                                  bj * bs:(bj + 1) * bs]
+                        if (bi, bj) in lf.blocks:
+                            lf.blocks[(bi, bj)][...] = blk
+                        elif np.any(blk != 0.0):
+                            raise ValueError(
+                                "rebind structure mismatch: new values "
+                                "fall outside the compiled input's leaf "
+                                "block structure")
+            else:
+                got = np.zeros_like(sub)
+                for (i, j), blk in lf.blocks.items():
+                    new = sub[i * bs:(i + 1) * bs, j * bs:(j + 1) * bs]
+                    blk[...] = new
+                    got[i * bs:(i + 1) * bs, j * bs:(j + 1) * bs] = new
+                if np.any(got != sub):
+                    raise ValueError(
+                        "rebind structure mismatch: new values fall "
+                        "outside the compiled input's leaf block "
+                        "structure")
+            lf.invalidate_norms()
+        else:
+            h = chunk.n // 2
+            fill(chunk.child(0, 0), sub[:h, :h])
+            fill(chunk.child(0, 1), sub[:h, h:])
+            if not chunk.upper:
+                fill(chunk.child(1, 0), sub[h:, :h])
+            fill(chunk.child(1, 1), sub[h:, h:])
+        chunk.norm2 = None
+        chunk.trace = None
+
+    fill(nid, a)
+
+
+def qt_rebind_from(g: CTGraph, dst: Optional[int], src: Optional[int]
+                   ) -> None:
+    """Copy leaf values from one quadtree into a structure-identical other.
+
+    This is the iterative-algorithm hot path: feeding a plan's output back
+    into its input slot copies the values *before* the replay starts, so
+    rebinding an input to the plan's own previous output is safe.  Raises
+    ``ValueError`` on any structural difference (NIL pattern, leaf keys).
+    """
+    g.flush()
+
+    def copy(d: Optional[int], s: Optional[int]) -> None:
+        dc: Optional[MatrixChunk] = g.value_of(d)
+        sc: Optional[MatrixChunk] = g.value_of(s)
+        if (dc is None) != (sc is None):
+            raise ValueError(
+                "rebind structure mismatch: NIL pattern differs between "
+                "the compiled input and the new operand")
+        if dc is None:
+            return
+        if dc.is_leaf != sc.is_leaf or dc.n != sc.n:
+            raise ValueError(
+                "rebind structure mismatch: quadtree shapes differ")
+        if dc.is_leaf:
+            if set(dc.leaf.blocks) != set(sc.leaf.blocks):
+                raise ValueError(
+                    "rebind structure mismatch: leaf block occupancy "
+                    "differs between the compiled input and the new "
+                    "operand")
+            for key, blk in sc.leaf.blocks.items():
+                dc.leaf.blocks[key][...] = blk
+            dc.leaf.invalidate_norms()
+        else:
+            for i in range(4):
+                copy(dc.children[i], sc.children[i])
+        dc.norm2 = None
+        dc.trace = None
+
+    copy(dst, src)
+
+
+def qt_invalidate_caches(g: CTGraph, nids) -> None:
+    """Drop chunk-level norm/trace caches of the given nodes' chunks.
+
+    Plan replay refreshes chunk values in place; every cache computed from
+    the old values (chunk norms used by SpAMM pruning, traces) must go.
+    Leaf-level caches are dropped by the engines' in-place fills; this
+    covers the chunk objects themselves, including internal create-level
+    chunks whose norms aggregate their subtrees.
+    """
+    for nid in nids:
+        chunk = g.nodes[nid].value
+        if isinstance(chunk, MatrixChunk):
+            chunk.norm2 = None
+            chunk.trace = None
+            if chunk.leaf is not None:
+                chunk.leaf.invalidate_norms()
+
+
+def qt_structure_fp(g: CTGraph, nid: Optional[int]) -> str:
+    """Structural fingerprint of a quadtree: NIL pattern + leaf occupancy.
+
+    Values are deliberately excluded — two matrices with the same
+    structure fingerprint are interchangeable as compiled-plan inputs
+    (same task program, same chunk shapes), differing only in the numbers
+    a rebind fills in.  Structure is final at registration (deferred
+    engines allocate placeholder blocks up front), so no flush is needed.
+    """
+    import hashlib
+
+    h = hashlib.sha1()
+
+    def walk(nid: Optional[int]) -> None:
+        chunk: Optional[MatrixChunk] = g.value_of(nid)
+        if chunk is None:
+            h.update(b"N")
+            return
+        if chunk.is_leaf:
+            h.update(f"L{chunk.n}:{chunk.leaf.bs}:{int(chunk.upper)}:"
+                     f"{sorted(chunk.leaf.blocks)}".encode())
+            return
+        h.update(f"I{chunk.n}:{int(chunk.upper)}(".encode())
+        for c in chunk.children:
+            walk(c)
+        h.update(b")")
+
+    walk(nid)
+    return h.hexdigest()
 
 
 _ = Dep  # re-export convenience for callers building custom task programs

@@ -66,6 +66,11 @@ class Node:
     flops: float = 0.0              # useful flops (leaf compute)
     level: int = -1                 # quadtree level of the task (-1 = n/a)
     payload: Any = None             # batchable leaf-op description (engine.py)
+    # structural decisions frozen at first execution so a Plan replay
+    # (api/plan.py) re-runs the *same* program: today this is the
+    # surviving block-pair list of a truncated leaf multiply, whose
+    # norm test would otherwise re-evaluate against the rebound values
+    replay: Any = None
 
 
 @dataclasses.dataclass

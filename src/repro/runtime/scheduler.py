@@ -233,15 +233,90 @@ class Scheduler:
             s.dedup_hits = 0
             s.flops_executed = 0.0
 
+    def replay(self, g: CTGraph, nids) -> SimReport:
+        """Re-simulate an already-simulated *fixed* task program.
+
+        Compiled-Plan re-execution (api/plan.py) registers zero new
+        tasks, so a plain :meth:`run` would find nothing to do.  This
+        marks the given nodes un-simulated again — freeing the chunks
+        their previous execution placed (placements of everything
+        *outside* the program, e.g. the input matrices, persist, so input
+        fetches are charged against the realistic distribution exactly as
+        in a first run) — and replays them through the normal
+        discrete-event loop.  Combine with :meth:`reset_stats` to isolate
+        one iteration's communication.
+        """
+        if self.store is None:          # nothing simulated yet: plain run
+            return self.run(g, only=self.unsimulated_closure(g, nids))
+        self.release(g, nids, forget_owner=True)
+        # restrict the re-run to the program (plus any genuinely
+        # unsimulated prerequisites): other pending work — e.g. another
+        # compiled-but-not-yet-simulated plan — keeps its own report
+        return self.run(g, only=self.unsimulated_closure(g, nids))
+
+    def release(self, g: CTGraph, nids, forget_owner: bool = False) -> None:
+        """Free the chunks these nodes placed; drop their placement
+        entries.  Alias nodes lose only their placement entry (the
+        resolved producer owns the chunk); ``forget_owner=True``
+        additionally marks the nodes un-simulated so the next
+        :meth:`run` executes them again (replay).  This is the single
+        place placement/ownership bookkeeping is unwound — both program
+        replay and :meth:`Session.free` go through it.
+        """
+        for nid in nids:
+            if forget_owner:
+                self._owner_of_node.pop(nid, None)
+            cid = self.placement.pop(nid, None)
+            node = g.nodes[nid]
+            if cid is not None and node.alias_of is None \
+                    and node.value is not None:
+                self.store.free(cid)
+
+    def has_simulated(self, nids) -> bool:
+        """Whether any of these nodes has already been executed on the
+        virtual cluster (public accessor for Plan.simulate)."""
+        return any(nid in self._owner_of_node for nid in nids)
+
+    def unsimulated_closure(self, g: CTGraph, nids) -> set:
+        """Not-yet-simulated nodes needed to simulate ``nids``.
+
+        Walks dependencies (their producers must be placed), parents (a
+        task becomes runnable only when its parent executed) and children
+        (a container's subtree belongs to its program) over unsimulated
+        nodes only.  This is the ``only`` filter for a restricted
+        :meth:`run`: a fixed program simulates by itself, without
+        sweeping in unrelated pending work.
+        """
+        seen: set = set()
+        stack = list(nids)
+        while stack:
+            nid = stack.pop()
+            if nid is None or nid in seen or nid in self._owner_of_node:
+                continue
+            seen.add(nid)
+            node = g.nodes[nid]
+            for d in node.deps:
+                stack.append(g.resolve(d.nid))
+            if node.parent is not None:
+                stack.append(node.parent)
+            stack.extend(node.children)
+        return seen
+
     # -- the discrete-event loop -------------------------------------------
     def run(self, g: CTGraph, n_workers: Optional[int] = None,
-            placement: Optional[str] = None, start_worker: int = 0
-            ) -> SimReport:
-        """Simulate all not-yet-simulated nodes of ``g``; returns stats."""
+            placement: Optional[str] = None, start_worker: int = 0,
+            only: Optional[set] = None) -> SimReport:
+        """Simulate all not-yet-simulated nodes of ``g``; returns stats.
+
+        ``only`` restricts the pass to a node subset (see
+        :meth:`unsimulated_closure`): nodes outside it stay pending for a
+        later run.
+        """
         self._configure(n_workers, placement)
         p = self.n_workers
         g.flush()   # batched leaf waves must run so per-task flops are final
-        todo = [n for n in g.nodes if n.nid not in self._owner_of_node]
+        todo = [n for n in g.nodes if n.nid not in self._owner_of_node
+                and (only is None or n.nid in only)]
         trace = Trace(p)
         if not todo:
             return self._report(0.0, 0, 0.0, trace, g, set())

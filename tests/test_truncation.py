@@ -218,12 +218,33 @@ class TestTauZeroIdentity:
         B = sess.from_dense(PATTERNS["banded"](6))
         with pytest.raises(ValueError, match="plain"):
             S.multiply(B, tau=1e-3)
-        # session-default tau routes silently to untruncated sym_multiply
-        sess2 = _session(tau=1e-3)
-        S2 = sess2.from_dense(s, upper=True)
-        B2 = sess2.from_dense(PATTERNS["banded"](6))
-        np.testing.assert_allclose((S2 @ B2).to_dense(),
-                                   s @ B2.to_dense(), atol=1e-10)
+
+    def test_session_default_tau_on_sym_paths_raises(self):
+        """The sym task programs are untruncated: a nonzero *session
+        default* tau must raise too, not silently compute exactly —
+        passing tau=0 explicitly is the documented opt-out."""
+        s = values_for_mask(random_symmetric_mask(N, 0.1, seed=5), seed=5,
+                            symmetric=True)
+        sess = _session(tau=1e-3)
+        S = sess.from_dense(s, upper=True)
+        B = sess.from_dense(PATTERNS["banded"](6))
+        with pytest.raises(ValueError, match="untruncated"):
+            _ = S @ B
+        with pytest.raises(ValueError, match="untruncated"):
+            S.sym_square()
+        with pytest.raises(ValueError, match="untruncated"):
+            B.syrk()
+        with pytest.raises(ValueError, match="untruncated"):
+            S.sym_multiply(B)
+        # tau=0 is the explicit exact-computation opt-out
+        np.testing.assert_allclose(
+            S.sym_multiply(B, tau=0.0).to_dense(), s @ B.to_dense(),
+            atol=1e-10)
+        np.testing.assert_allclose(S.sym_square(tau=0.0).to_dense(),
+                                   s @ s, atol=1e-10)
+        np.testing.assert_allclose(B.syrk(tau=0.0).to_dense(),
+                                   B.to_dense() @ B.to_dense().T,
+                                   atol=1e-10)
 
 
 class TestMonotonicity:
