@@ -30,6 +30,8 @@ BENCHES = [
      "Figs 10-11: S^2 on 3-D overlap matrices"),
     ("bench_tpu_comm", [],
      "Fig 14: HLO collective bytes, halo vs SpSUMMA"),
+    ("bench_mesh_comm", ["--out", "BENCH_mesh_comm.json"],
+     "Table 1 on the mesh executor: measured fetch vs SpSUMMA"),
     ("bench_truncation", ["--out", "BENCH_truncation.json"],
      "SpAMM truncated multiply: flops/comm-vs-error tau sweep"),
     ("bench_expr_reuse", ["--out", "BENCH_expr_reuse.json"],
@@ -43,6 +45,8 @@ QUICK = [
      "quick truncated-multiply tau sweep (error-vs-cost trajectory)"),
     ("bench_expr_reuse", ["--quick", "--out", "BENCH_expr_reuse.json"],
      "quick compiled-Plan reuse sweep (flat-iteration + overhead guard)"),
+    ("bench_mesh_comm", ["--quick", "--out", "BENCH_mesh_comm.json"],
+     "quick mesh-executor fetch-volume sweep (Table-1 shape guard)"),
 ]
 
 

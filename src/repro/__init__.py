@@ -9,13 +9,14 @@ Imports are lazy (PEP 562) so ``import repro`` stays cheap and pulling in
 a submodule never drags jax into processes that don't need it.
 """
 
-__all__ = ["Session", "Matrix", "Plan", "api", "core", "runtime"]
+__all__ = ["Session", "Matrix", "Plan", "PlanStructureError",
+           "api", "core", "runtime"]
 
 _SUBPACKAGES = ("api", "core", "runtime", "kernels")
 
 
 def __getattr__(name):
-    if name in ("Session", "Matrix", "Plan"):
+    if name in ("Session", "Matrix", "Plan", "PlanStructureError"):
         from repro import api
         return getattr(api, name)
     if name in _SUBPACKAGES:

@@ -18,9 +18,9 @@ README.md for the migration table from the free-function API.
 from .expr import (Add, Expr, Input, MatMul, Scale, SymMul, SymSquare,
                    Syrk, Transpose)
 from .matrix import Matrix
-from .plan import Plan
+from .plan import Plan, PlanStructureError
 from .session import PLACEMENT_ALIASES, Session
 
-__all__ = ["Session", "Matrix", "Plan", "PLACEMENT_ALIASES", "Expr",
-           "Input", "Transpose", "Scale", "Add", "MatMul", "SymSquare",
-           "Syrk", "SymMul"]
+__all__ = ["Session", "Matrix", "Plan", "PlanStructureError",
+           "PLACEMENT_ALIASES", "Expr", "Input", "Transpose", "Scale",
+           "Add", "MatMul", "SymSquare", "Syrk", "SymMul"]

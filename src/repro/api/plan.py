@@ -42,13 +42,13 @@ import numpy as np
 from repro.core.multiply import (TruncationReport, qt_add, qt_multiply,
                                  qt_replay, qt_scale, qt_sym_multiply,
                                  qt_sym_square, qt_syrk, qt_transpose)
-from repro.core.quadtree import (qt_invalidate_caches, qt_rebind_dense,
-                                 qt_rebind_from)
+from repro.core.quadtree import (PlanStructureError, qt_invalidate_caches,
+                                 qt_rebind_dense, qt_rebind_from)
 
 from .expr import (Add, Expr, Input, MatMul, Scale, SymMul, SymSquare,
                    Syrk, Transpose)
 
-__all__ = ["Plan", "lower"]
+__all__ = ["Plan", "PlanStructureError", "lower"]
 
 
 def lower(session, expr: Expr, params, reports: list,
@@ -131,6 +131,10 @@ class Plan:
         self.out_upper = False
         self.nodes: Optional[range] = None  # registered nid range
         self.n_runs = 0
+        # plans this one delegated to after a structure-mismatch rebind
+        # with recompile=True, keyed by their cache key: later runs with
+        # the same new structure replay these instead of compiling again
+        self._recompiled: dict[str, "Plan"] = {}
 
     def __repr__(self) -> str:
         state = (f"tasks={len(self.nodes)}" if self.nodes is not None
@@ -139,7 +143,7 @@ class Plan:
                 f"{state}, key={self.key[:10]})")
 
     # -- execution ----------------------------------------------------------
-    def run(self, **bindings) -> "Matrix":
+    def run(self, *, recompile: bool = False, **bindings) -> "Matrix":
         """Execute the program; returns the result handle.
 
         Keyword arguments rebind input slots by name (the ``name=`` given
@@ -151,6 +155,17 @@ class Plan:
         every later run registers **zero tasks**: it refreshes the leaf
         inputs in place and replays the recorded program through the
         leaf engine.
+
+        A rebound value whose sparsity structure differs from the
+        structure frozen into this plan's fingerprint raises
+        :class:`~repro.core.quadtree.PlanStructureError` (replaying the
+        frozen program — including any truncation pair lists — against a
+        different structure would silently drop contributions).
+        ``recompile=True`` handles the changing-sparsity regime instead:
+        on a structure mismatch the expression is recompiled through the
+        session's plan cache against fresh inputs built from the new
+        values, and that plan runs.  ``recompile`` is a reserved keyword:
+        it is never treated as an input-slot name.
         """
         unknown = set(bindings) - set(self.input_names)
         if unknown:
@@ -158,16 +173,84 @@ class Plan:
                 f"unknown plan input(s) {sorted(unknown)}; this plan binds "
                 f"{self.input_names}")
         by_slot = {self.input_names.index(k): v for k, v in bindings.items()}
-        return self._run(by_slot)
+        return self._run(by_slot, recompile=recompile)
 
-    def _run(self, by_slot: dict) -> "Matrix":
-        self._rebind(by_slot)
+    def _run(self, by_slot: dict, recompile: bool = False) -> "Matrix":
+        try:
+            self._rebind(by_slot)
+        except PlanStructureError:
+            # rebinds are atomic (validate-then-fill), so the compiled
+            # inputs are untouched and this plan stays runnable
+            if not recompile:
+                raise
+            return self._recompile_run(by_slot)
         if self.nodes is None:
             self._execute_first()
         else:
             self._replay()
         self.n_runs += 1
         return self._handle()
+
+    def _recompile_run(self, by_slot: dict) -> "Matrix":
+        """Compile the same expression against fresh inputs and run it.
+
+        Each bound slot whose value no longer fits the compiled structure
+        gets a *new* input matrix built from the new values (dense
+        arrays through ``Session.from_dense``; Matrix handles bind
+        directly), the expression is rewritten over the substituted
+        inputs, and the session's plan cache takes it from there — same
+        structure next iteration hits the recompiled plan's fast replay
+        path.  This plan itself is left fully intact.
+        """
+        sess = self.session
+        # a prior recompile may already hold the new structure: rebinding
+        # into it is a zero-task replay, so try those before building
+        # fresh inputs (keeps iterating with recompile=True from growing
+        # a new plan per call)
+        for succ in self._recompiled.values():
+            try:
+                return succ._run(by_slot)
+            except PlanStructureError:
+                continue
+        subst: dict = {}
+        for slot, value in by_slot.items():
+            if value is None:
+                continue
+            old = self.input_nids[slot]
+            if hasattr(value, "_ensure"):       # a Matrix handle
+                value._ensure()
+                if value.session is not sess:
+                    raise ValueError(
+                        "plan rebind: operand belongs to a different "
+                        "Session")
+                if value.params != self.params:
+                    raise ValueError(
+                        "plan recompile: operand quadtree parameters "
+                        f"{value.params} differ from the plan's "
+                        f"{self.params}")
+                if value._t:
+                    m = sess.from_dense(value.to_dense(),
+                                        upper=value.upper,
+                                        leaf_n=self.params.leaf_n,
+                                        bs=self.params.bs)
+                else:
+                    m = value
+            else:
+                m = sess.from_dense(np.asarray(value),
+                                    leaf_n=self.params.leaf_n,
+                                    bs=self.params.bs)
+            # keep the user-facing slot name on the substituted input so
+            # the recompiled plan binds the same names
+            if m.node is not None:
+                sess._input_names.setdefault(m.node,
+                                             self.input_names[slot])
+            subst[old] = Input(m.node, self.params.n, upper=m.upper)
+        e = _substitute_inputs(self.expr, subst)
+        if self.out_t:
+            e = Transpose(e)    # restore the transpose peeled at compile
+        plan, _ = sess._compile_expr(e, self.params)
+        self._recompiled.setdefault(plan.key, plan)
+        return plan._run({})
 
     def _rebind(self, by_slot: dict) -> None:
         g = self.session.graph
@@ -277,6 +360,35 @@ class Plan:
     def error_bound(self) -> float:
         """Summed worst-case truncation bound of all truncated products."""
         return sum(r.error_bound for r in self.reports)
+
+
+def _substitute_inputs(e: Expr, subst: dict) -> Expr:
+    """Rebuild an expression with some Input nids replaced.
+
+    ``subst`` maps old input nid -> replacement :class:`Input`.  Nodes
+    are immutable value types, so an untouched subtree is returned
+    as-is (and common subexpressions stay shared by value equality).
+    """
+    if isinstance(e, Input):
+        return subst.get(e.nid, e)
+    if isinstance(e, Transpose):
+        return Transpose(_substitute_inputs(e.a, subst))
+    if isinstance(e, Scale):
+        return Scale(e.alpha, _substitute_inputs(e.a, subst))
+    if isinstance(e, Add):
+        return Add(tuple(_substitute_inputs(t, subst) for t in e.terms))
+    if isinstance(e, MatMul):
+        return MatMul(_substitute_inputs(e.a, subst),
+                      _substitute_inputs(e.b, subst),
+                      ta=e.ta, tb=e.tb, tau=e.tau)
+    if isinstance(e, SymSquare):
+        return SymSquare(_substitute_inputs(e.a, subst))
+    if isinstance(e, Syrk):
+        return Syrk(_substitute_inputs(e.a, subst), trans=e.trans)
+    if isinstance(e, SymMul):
+        return SymMul(_substitute_inputs(e.s, subst),
+                      _substitute_inputs(e.b, subst), e.side)
+    raise TypeError(f"not an Expr: {e!r}")
 
 
 def _subtree_nids(g, nid: Optional[int]) -> list:

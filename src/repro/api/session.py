@@ -57,7 +57,7 @@ PLACEMENT_ALIASES = {p: p for p in PLACEMENTS}
 PLACEMENT_ALIASES.update({"parent": "parent-worker", "rr": "round-robin"})
 
 #: engine spec strings resolvable by :func:`repro.core.engine.make_engine`
-ENGINE_NAMES = ("numpy", "pallas")
+ENGINE_NAMES = ("numpy", "pallas", "mesh")
 
 
 def _normalize_placement(placement: Optional[str]) -> Optional[str]:
@@ -88,7 +88,9 @@ class Session:
     Parameters
     ----------
     engine : ``"numpy"`` (reference, immediate), ``"pallas"`` (deferred,
-        cross-leaf batched kernel waves) or a
+        cross-leaf batched kernel waves), ``"mesh"`` (device-sharded
+        wave execution with counted push/fetch collectives over a jax
+        mesh — DESIGN.md §7) or a
         :class:`~repro.core.engine.LeafEngine` instance.  One stateful
         engine instance serves one session/graph; rebinding raises
         :class:`~repro.core.engine.EngineRebindError`.  Unknown specs
@@ -375,9 +377,6 @@ class Session:
             raise TypeError(f"free: expected a Matrix, got {type(matrix)!r}")
         if matrix._expr is not None:
             return 0                    # never materialised: nothing placed
-        sched = self._sched
-        if sched is None or sched.store is None:
-            return 0
         from .plan import _subtree_nids
         targets = set(_subtree_nids(self.graph, matrix.node))
         targets.update(matrix._prog or ())
@@ -388,6 +387,14 @@ class Session:
             if tnid is not None:
                 targets.difference_update(
                     _subtree_nids(self.graph, tnid))
+        # engine hook *before* the scheduler early-return: the mesh
+        # executor holds device-resident buffers and ownership/residency
+        # entries for these leaves even when nothing was ever simulated
+        if self.graph._engine is not None:
+            self.graph._engine.free_chunks(self.graph, targets)
+        sched = self._sched
+        if sched is None or sched.store is None:
+            return 0
         before = sum(s.owned_bytes for s in sched.store.stats)
         sched.release(self.graph, targets)
         # alias entries (identifier copies) pointing into the freed

@@ -109,6 +109,14 @@ class LeafEngine:
     def flush(self, g) -> None:
         """Run all deferred work; afterwards every chunk holds real numbers."""
 
+    def free_chunks(self, g, nids) -> None:
+        """Drop engine-side state tied to these chunks (Session.free).
+
+        Stateless backends keep nothing per chunk; the mesh executor
+        overrides this to release device-resident block buffers and
+        ownership/residency bookkeeping for the freed leaves.
+        """
+
     def stats(self) -> dict:
         return {}
 
@@ -119,6 +127,11 @@ def make_engine(spec: Any) -> LeafEngine:
         return NumpyEngine()
     if spec == "pallas":
         return PallasEngine()
+    if spec == "mesh":
+        # lazy import: the mesh executor pulls in jax device state, which
+        # must stay out of processes that only simulate
+        from repro.launch.mesh_exec import MeshEngine
+        return MeshEngine()
     if isinstance(spec, LeafEngine):
         return spec
     raise ValueError(f"unknown leaf engine spec: {spec!r}")

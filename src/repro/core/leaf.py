@@ -46,7 +46,7 @@ class LeafMatrix:
     """
 
     __slots__ = ("n", "bs", "blocks", "upper", "dtype",
-                 "_bnorm2", "_norm2_tot", "_trace")
+                 "_bnorm2", "_norm2_tot", "_trace", "_version")
 
     def __init__(self, n: int, bs: int, blocks: Optional[dict] = None,
                  upper: bool = False, dtype=np.float64):
@@ -63,6 +63,10 @@ class LeafMatrix:
         self._bnorm2: Optional[dict[tuple[int, int], float]] = None
         self._norm2_tot: Optional[float] = None
         self._trace: Optional[float] = None
+        # monotone mutation counter: bumped with every cache
+        # invalidation so device-resident copies of this leaf's blocks
+        # (mesh engine) can detect staleness without hashing values
+        self._version = 0
 
     # -- construction -------------------------------------------------------
     @classmethod
@@ -162,6 +166,7 @@ class LeafMatrix:
         self._bnorm2 = None
         self._norm2_tot = None
         self._trace = None
+        self._version += 1
 
     def frob2(self) -> float:
         return self.norm2()

@@ -348,8 +348,29 @@ def _trace(g: CTGraph, nid: Optional[int]) -> float:
 # quadtree structure — NIL pattern, leaf block occupancy — is part of the
 # plan's fingerprint and must not change, so rebinding is an in-place fill
 # of the existing leaf blocks plus cache invalidation.  No tasks are
-# registered and no chunks are created.
+# registered and no chunks are created.  Structure mismatches raise
+# :class:`PlanStructureError` *before any block is mutated* (validate
+# pass, then fill pass), so a failed rebind leaves the compiled input —
+# and therefore the plan — fully usable; ``plan.run(..., recompile=True)``
+# relies on this atomicity to fall back to a fresh compile.
 # ---------------------------------------------------------------------------
+
+class PlanStructureError(ValueError):
+    """A rebound plan input's sparsity structure differs from the structure
+    frozen into the compiled fingerprint.
+
+    A compiled :class:`~repro.api.plan.Plan` replays a *fixed* task
+    program — including truncation pair lists frozen at compile time — so
+    values that fall outside the compiled structure (a denser iterate in
+    a purification loop, a different NIL pattern) cannot be replayed:
+    the stale program would silently drop their contributions.  Either
+    build a fresh matrix and plan for the new structure, or pass
+    ``recompile=True`` to :meth:`~repro.api.plan.Plan.run` to recompile
+    through the session's plan cache transparently.  Subclasses
+    ``ValueError`` for backwards compatibility with callers that caught
+    the untyped error this used to be.
+    """
+
 
 def qt_rebind_dense(g: CTGraph, nid: Optional[int], a: np.ndarray,
                     params: QTParams) -> None:
@@ -357,54 +378,59 @@ def qt_rebind_dense(g: CTGraph, nid: Optional[int], a: np.ndarray,
 
     ``a`` must be supported on the tree's existing structure: any entry
     outside a stored leaf block (or inside a NIL subtree) must be zero —
-    structure changes need a fresh matrix (and a fresh plan).  For
-    symmetric upper storage pass the full symmetric matrix, exactly as
-    :func:`qt_from_dense` expects.
+    structure changes raise :class:`PlanStructureError` before anything
+    is written (a fresh matrix and plan, or ``Plan.run(recompile=True)``,
+    handle a different sparsity structure).  For symmetric upper storage
+    pass the full symmetric matrix, exactly as :func:`qt_from_dense`
+    expects.
     """
     a = np.asarray(a)
     assert a.shape == (params.n, params.n)
     g.flush()   # placeholder leaves must be final before we overwrite them
 
-    def fill(nid: Optional[int], sub: np.ndarray) -> None:
+    def check(nid: Optional[int], sub: np.ndarray) -> None:
         chunk: Optional[MatrixChunk] = g.value_of(nid)
         if chunk is None:
             if np.any(sub != 0.0):
-                raise ValueError(
+                raise PlanStructureError(
                     "rebind structure mismatch: new values are nonzero "
                     "inside a NIL subtree of the compiled input; build a "
                     "new matrix (and plan) for a different sparsity "
-                    "structure")
+                    "structure, or run the plan with recompile=True")
             return
         if chunk.is_leaf:
             lf = chunk.leaf
             bs = lf.bs
-            if lf.upper:
-                # stored support is the upper block triangle; values in
-                # an unstored upper block are a structure change (the
-                # strictly-lower data is its transpose by construction)
-                grid = lf.n // bs
-                for bi in range(grid):
-                    for bj in range(bi, grid):
-                        blk = sub[bi * bs:(bi + 1) * bs,
-                                  bj * bs:(bj + 1) * bs]
-                        if (bi, bj) in lf.blocks:
-                            lf.blocks[(bi, bj)][...] = blk
-                        elif np.any(blk != 0.0):
-                            raise ValueError(
-                                "rebind structure mismatch: new values "
-                                "fall outside the compiled input's leaf "
-                                "block structure")
-            else:
-                got = np.zeros_like(sub)
-                for (i, j), blk in lf.blocks.items():
-                    new = sub[i * bs:(i + 1) * bs, j * bs:(j + 1) * bs]
-                    blk[...] = new
-                    got[i * bs:(i + 1) * bs, j * bs:(j + 1) * bs] = new
-                if np.any(got != sub):
-                    raise ValueError(
-                        "rebind structure mismatch: new values fall "
-                        "outside the compiled input's leaf block "
-                        "structure")
+            grid = lf.n // bs
+            for bi in range(grid):
+                bj0 = bi if lf.upper else 0
+                for bj in range(bj0, grid):
+                    if (bi, bj) in lf.blocks:
+                        continue
+                    blk = sub[bi * bs:(bi + 1) * bs, bj * bs:(bj + 1) * bs]
+                    if np.any(blk != 0.0):
+                        raise PlanStructureError(
+                            "rebind structure mismatch: new values fall "
+                            "outside the compiled input's leaf block "
+                            "structure; build a new matrix (and plan), "
+                            "or run the plan with recompile=True")
+        else:
+            h = chunk.n // 2
+            check(chunk.child(0, 0), sub[:h, :h])
+            check(chunk.child(0, 1), sub[:h, h:])
+            if not chunk.upper:
+                check(chunk.child(1, 0), sub[h:, :h])
+            check(chunk.child(1, 1), sub[h:, h:])
+
+    def fill(nid: Optional[int], sub: np.ndarray) -> None:
+        chunk: Optional[MatrixChunk] = g.value_of(nid)
+        if chunk is None:
+            return
+        if chunk.is_leaf:
+            lf = chunk.leaf
+            bs = lf.bs
+            for (i, j), blk in lf.blocks.items():
+                blk[...] = sub[i * bs:(i + 1) * bs, j * bs:(j + 1) * bs]
             lf.invalidate_norms()
         else:
             h = chunk.n // 2
@@ -416,6 +442,7 @@ def qt_rebind_dense(g: CTGraph, nid: Optional[int], a: np.ndarray,
         chunk.norm2 = None
         chunk.trace = None
 
+    check(nid, a)   # atomic: raise before the first block is written
     fill(nid, a)
 
 
@@ -426,28 +453,42 @@ def qt_rebind_from(g: CTGraph, dst: Optional[int], src: Optional[int]
     This is the iterative-algorithm hot path: feeding a plan's output back
     into its input slot copies the values *before* the replay starts, so
     rebinding an input to the plan's own previous output is safe.  Raises
-    ``ValueError`` on any structural difference (NIL pattern, leaf keys).
+    :class:`PlanStructureError` on any structural difference (NIL
+    pattern, leaf keys) — before any destination block is written, so the
+    compiled input survives a failed rebind untouched.
     """
     g.flush()
+
+    def check(d: Optional[int], s: Optional[int]) -> None:
+        dc: Optional[MatrixChunk] = g.value_of(d)
+        sc: Optional[MatrixChunk] = g.value_of(s)
+        if (dc is None) != (sc is None):
+            raise PlanStructureError(
+                "rebind structure mismatch: NIL pattern differs between "
+                "the compiled input and the new operand; build a new "
+                "plan, or run the existing one with recompile=True")
+        if dc is None:
+            return
+        if dc.is_leaf != sc.is_leaf or dc.n != sc.n:
+            raise PlanStructureError(
+                "rebind structure mismatch: quadtree shapes differ")
+        if dc.is_leaf:
+            if set(dc.leaf.blocks) != set(sc.leaf.blocks):
+                raise PlanStructureError(
+                    "rebind structure mismatch: leaf block occupancy "
+                    "differs between the compiled input and the new "
+                    "operand; build a new plan, or run the existing one "
+                    "with recompile=True")
+        else:
+            for i in range(4):
+                check(dc.children[i], sc.children[i])
 
     def copy(d: Optional[int], s: Optional[int]) -> None:
         dc: Optional[MatrixChunk] = g.value_of(d)
         sc: Optional[MatrixChunk] = g.value_of(s)
-        if (dc is None) != (sc is None):
-            raise ValueError(
-                "rebind structure mismatch: NIL pattern differs between "
-                "the compiled input and the new operand")
         if dc is None:
             return
-        if dc.is_leaf != sc.is_leaf or dc.n != sc.n:
-            raise ValueError(
-                "rebind structure mismatch: quadtree shapes differ")
         if dc.is_leaf:
-            if set(dc.leaf.blocks) != set(sc.leaf.blocks):
-                raise ValueError(
-                    "rebind structure mismatch: leaf block occupancy "
-                    "differs between the compiled input and the new "
-                    "operand")
             for key, blk in sc.leaf.blocks.items():
                 dc.leaf.blocks[key][...] = blk
             dc.leaf.invalidate_norms()
@@ -457,6 +498,7 @@ def qt_rebind_from(g: CTGraph, dst: Optional[int], src: Optional[int]
         dc.norm2 = None
         dc.trace = None
 
+    check(dst, src)   # atomic: raise before the first block is written
     copy(dst, src)
 
 

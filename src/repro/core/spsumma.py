@@ -27,6 +27,26 @@ from jax.experimental.shard_map import shard_map
 from .blocksparse import enumerate_pairs_flat
 
 
+def summa_pgrid(p: int) -> int:
+    """sqrt(p), validated: SpSUMMA runs on a square process grid.
+
+    A non-square device count used to fall through ``int(np.sqrt(p))``
+    and silently shard onto a smaller sub-grid (p=6 -> 2x2, two devices
+    idle and every measured slab-byte count wrong).  Fail fast instead.
+    """
+    p = int(p)
+    if p < 1:
+        raise ValueError(f"SpSUMMA needs at least one device, got p={p}")
+    pgrid = int(round(p ** 0.5))
+    if pgrid * pgrid != p:
+        raise ValueError(
+            f"SpSUMMA needs a perfect-square device count for its "
+            f"sqrt(p) x sqrt(p) process grid; got p={p}. Use p in "
+            f"{{1, 4, 9, 16, ...}} or the parent-worker mesh engine "
+            f"(Session(engine='mesh')), which accepts any device count.")
+    return pgrid
+
+
 @dataclasses.dataclass(frozen=True)
 class SummaPlan:
     grid: int              # global block grid
@@ -49,7 +69,12 @@ def plan_summa(mask_a: np.ndarray, mask_b: np.ndarray, bs: int,
                pgrid: int, slack: float = 1.3, round_to: int = 8
                ) -> SummaPlan:
     grid = mask_a.shape[0]
-    assert grid % pgrid == 0
+    summa_pgrid(pgrid * pgrid)      # pgrid must be a positive integer
+    if grid % pgrid != 0:
+        raise ValueError(
+            f"SpSUMMA panel split needs the block grid ({grid}) to be "
+            f"divisible by pgrid ({pgrid}); pad the matrix or pick a "
+            f"device count whose sqrt divides the grid.")
     panel = grid // pgrid
     ma, mb = np.asarray(mask_a), np.asarray(mask_b)
     mc = (ma.astype(np.int64) @ mb.astype(np.int64)) > 0

@@ -21,8 +21,32 @@ def make_spmm_mesh(n_dev: int, *, axis: str = "dev"):
     return jax.make_mesh((n_dev,), (axis,))
 
 
-def make_summa_mesh(pgrid: int):
-    """2-D process grid for the SpSUMMA baseline."""
+def make_summa_mesh(pgrid: int | None = None):
+    """2-D process grid for the SpSUMMA baseline.
+
+    ``pgrid=None`` derives the grid from the visible device count, which
+    must then be a perfect square — p=6 used to shard silently onto a
+    2x2 sub-grid with two devices idle.  An explicit ``pgrid`` is
+    validated against the device count for the same reason.
+    """
+    from repro.core.spsumma import summa_pgrid
+
+    n_dev = jax.device_count()
+    if pgrid is None:
+        pgrid = summa_pgrid(n_dev)
+    else:
+        summa_pgrid(pgrid * pgrid)  # positive-int sanity
+        if pgrid * pgrid > n_dev:
+            raise ValueError(
+                f"make_summa_mesh: pgrid={pgrid} needs {pgrid * pgrid} "
+                f"devices but only {n_dev} are visible.")
+        if pgrid * pgrid < n_dev:
+            raise ValueError(
+                f"make_summa_mesh: pgrid={pgrid} uses only "
+                f"{pgrid * pgrid} of {n_dev} visible devices — SpSUMMA "
+                f"would silently mis-shard. Pass pgrid=None to derive "
+                f"the grid (device count must be a perfect square), or "
+                f"restrict visible devices.")
     return jax.make_mesh((pgrid, pgrid), ("pr", "pc"))
 
 

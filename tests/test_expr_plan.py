@@ -733,3 +733,74 @@ class TestPlanApi:
         _ = C.to_dense()
         assert not C.is_lazy
         assert isinstance(Matrix.from_dense(lazy, _dense(seed=1)), Matrix)
+
+
+class TestPlanStructureGuard:
+    """Structure-mismatch rebinds raise typed PlanStructureError and the
+    recompile=True escape hatch handles the changing-sparsity regime
+    (the bugfix headline of the mesh-executor PR)."""
+
+    ENGINES = ["numpy",
+               pytest.param("pallas", marks=pytest.mark.pallas)]
+
+    @pytest.mark.parametrize("engine", ENGINES)
+    def test_denser_rebind_under_tau_raises_typed(self, engine):
+        """Replaying a frozen truncation pair list against a denser input
+        would silently drop contributions — it must raise, atomically,
+        with the typed exception."""
+        from repro import PlanStructureError
+        a = _banded(5, seed=41)
+        lazy = _session(engine=engine, lazy=True)
+        X = lazy.from_dense(a, name="X")
+        plan = lazy.compile(X.multiply(X, tau=1e-3))
+        out1 = plan.run().to_dense()
+        denser = _banded(25, seed=42)
+        with pytest.raises(PlanStructureError):
+            plan.run(X=denser)
+        with pytest.raises(PlanStructureError):
+            plan.run(X=lazy.from_dense(denser))
+        # the failed rebind was atomic: the plan replays the old program
+        # against the old values untouched
+        np.testing.assert_allclose(plan.run().to_dense(), out1,
+                                   atol=1e-12)
+
+    @pytest.mark.parametrize("engine", ENGINES)
+    def test_recompile_escape_hatch(self, engine):
+        """recompile=True recompiles through the session cache on a
+        structure mismatch and returns the correct denser result."""
+        a = _banded(5, seed=43)
+        tol = dict(atol=1e-12) if engine == "numpy" else TOL
+        lazy = _session(engine=engine, lazy=True)
+        X = lazy.from_dense(a, name="X")
+        plan = lazy.compile(X.multiply(X, tau=1e-4))
+        plan.run()
+        denser = _banded(25, seed=44)
+        out = plan.run(X=denser, recompile=True)
+        got = out.to_dense()
+        want = denser @ denser
+        assert np.abs(got - want).max() < 1e-2      # tau-truncated
+        # second recompile with the same (new) structure reuses the
+        # recompiled plan instead of growing the session's plan cache
+        n_plans = len(lazy._plans)
+        out2 = plan.run(X=2.0 * denser, recompile=True)
+        assert len(lazy._plans) == n_plans
+        np.testing.assert_allclose(out2.to_dense(), 4.0 * got, **tol)
+        # the original plan is still intact for the original structure
+        np.testing.assert_allclose(plan.run(X=a).to_dense(),
+                                   plan.run().to_dense(), atol=1e-12)
+
+    def test_plan_structure_error_is_value_error(self):
+        """Typed but backwards compatible: existing except ValueError
+        handlers keep working."""
+        from repro import PlanStructureError
+        assert issubclass(PlanStructureError, ValueError)
+
+    def test_recompile_kwarg_never_a_slot_name(self):
+        """`recompile` is reserved: a same-structure run with
+        recompile=True binds nothing and just replays."""
+        lazy = _session(lazy=True)
+        X = lazy.from_dense(_dense(seed=45), name="X")
+        plan = lazy.compile(X @ X)
+        out1 = plan.run().to_dense()
+        np.testing.assert_allclose(plan.run(recompile=True).to_dense(),
+                                   out1, atol=1e-12)
