@@ -1,0 +1,50 @@
+"""Shared benchmark-artifact writer: one envelope for every BENCH_*.json.
+
+Every benchmark artifact at the repo root carries the same envelope::
+
+    {"schema": 1, "bench": "<name>", "params": {...}, <payload keys>}
+
+``schema`` versions the envelope itself, ``bench`` names the producing
+script (its module name minus the ``bench_`` prefix), ``params`` records
+the sweep configuration (quick mode, sizes, worker counts) so a stored
+artifact is self-describing.  Payload keys stay at the top level, so
+existing consumers (launch/report.py, the pinned-value tests, the CI
+perf-trajectory checks) keep reading the same paths — the envelope is
+additive.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+from typing import Optional
+
+SCHEMA_VERSION = 1
+
+
+def artifact(bench: str, payload: dict,
+             params: Optional[dict] = None) -> dict:
+    """Assemble the enveloped artifact document (payload keys win)."""
+    doc = {"schema": SCHEMA_VERSION, "bench": bench,
+           "params": dict(params or {})}
+    doc.update(payload)
+    return doc
+
+
+def write_artifact(path, bench: str, payload: dict,
+                   params: Optional[dict] = None) -> pathlib.Path:
+    """Write an enveloped ``BENCH_*.json`` artifact (stable formatting)."""
+    path = pathlib.Path(path)
+    doc = artifact(bench, payload, params)
+    path.write_text(json.dumps(doc, indent=1, sort_keys=True) + "\n")
+    return path
+
+
+def validate_artifact(doc: dict) -> dict:
+    """Assert the envelope shape; returns the document unchanged."""
+    if not isinstance(doc, dict) or doc.get("schema") != SCHEMA_VERSION:
+        raise ValueError(f"not a bench artifact (schema={SCHEMA_VERSION})")
+    if not isinstance(doc.get("bench"), str) or not doc["bench"]:
+        raise ValueError("bench artifact missing 'bench' name")
+    if not isinstance(doc.get("params"), dict):
+        raise ValueError("bench artifact missing 'params' dict")
+    return doc

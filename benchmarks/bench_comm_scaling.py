@@ -24,7 +24,6 @@ CSV on stdout; ``--out FILE`` additionally writes the full JSON record
 sweep sized for CI.
 """
 import argparse
-import json
 import pathlib
 
 import numpy as np
@@ -34,6 +33,11 @@ from repro.core import analysis as an
 from repro.core.patterns import (banded_mask, divide_space_order,
                                  overlap_pairs, particle_cloud, random_mask,
                                  values_for_mask)
+
+try:
+    from benchmarks._artifact import write_artifact
+except ImportError:                     # run directly from benchmarks/
+    from _artifact import write_artifact
 
 
 def _measure(sess, p, op):
@@ -196,10 +200,13 @@ def main() -> None:
 
     records = sweep(patterns, args.placements, ps, quick=args.quick)
     summary = summarize(records)
-    doc = {"bench": "comm_scaling", "quick": args.quick,
-           "ps": list(ps), "records": records, "summary": summary}
     if args.out:
-        args.out.write_text(json.dumps(doc, indent=1, sort_keys=True))
+        write_artifact(args.out, "comm_scaling",
+                       {"quick": args.quick, "ps": list(ps),
+                        "records": records, "summary": summary},
+                       params={"quick": args.quick, "ps": list(ps),
+                               "patterns": patterns,
+                               "placements": args.placements})
         print(f"wrote {args.out}")
 
     # Table 1 regression (banded pattern): locality-aware placement keeps

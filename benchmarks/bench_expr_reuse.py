@@ -22,6 +22,11 @@ import time
 
 import numpy as np
 
+try:
+    from benchmarks._artifact import write_artifact
+except ImportError:                     # run directly from benchmarks/
+    from _artifact import write_artifact
+
 
 def _operand(n: int, seed: int = 0, rate: float = 6.0) -> np.ndarray:
     """Full-support decayed operand: structure closed under products."""
@@ -146,7 +151,6 @@ def main() -> int:
         n, leaf_n, bs, iters, repeats = 512, 64, 8, 12, 25
 
     rec = {
-        "bench": "expr_reuse",
         "reuse": bench_reuse(n, leaf_n, bs, iters),
         "overhead": bench_overhead(n_ov, d_ov, leaf_n, bs, repeats),
     }
@@ -154,7 +158,10 @@ def main() -> int:
                                     in rec["overhead"].items()
                                     if not k.endswith("_all")})
     print(json.dumps(printable, indent=1, sort_keys=True))
-    args.out.write_text(json.dumps(rec, indent=1, sort_keys=True))
+    write_artifact(args.out, "expr_reuse", rec,
+                   params={"quick": args.quick, "n": n, "leaf_n": leaf_n,
+                           "bs": bs, "iters": iters, "repeats": repeats,
+                           "n_overhead": n_ov, "d_overhead": d_ov})
     print(f"wrote {args.out}")
 
     ov = rec["overhead"]["overhead"]

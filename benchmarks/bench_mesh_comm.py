@@ -26,7 +26,14 @@ import pathlib
 import subprocess
 import sys
 
+try:
+    from benchmarks._artifact import write_artifact
+except ImportError:                     # run directly from benchmarks/
+    from _artifact import write_artifact
+
 _CHILD = "_child"
+#: env var naming the path the mesh child writes its Perfetto trace to
+_TRACE_ENV = "BENCH_MESH_TRACE"
 
 MESH_PS = (2, 4, 8)
 SUMMA_PS = (4, 16)
@@ -48,6 +55,10 @@ def child(scheme: str, p: int, n: int) -> None:
         C = A @ B
         np.testing.assert_allclose(C.to_dense(), a @ b, atol=1e-3)
         st = sess.engine_stats()
+        trace_out = os.environ.get(_TRACE_ENV)
+        if trace_out:
+            from repro.obs import mesh_stats_events, write_chrome_trace
+            write_chrome_trace(trace_out, mesh_stats_events(st))
         rec = {
             "scheme": "mesh", "p": p, "n": n,
             "max_fetched_bytes_per_dev": max(st["fetched_bytes"]),
@@ -97,9 +108,13 @@ def main() -> int:
     runs = [("mesh", p, scale * p) for p in MESH_PS] + \
            [("summa", p, scale * p) for p in SUMMA_PS]
     records = []
+    root = pathlib.Path(__file__).parents[1]
     for scheme, p, n in runs:
         env = dict(os.environ)
         env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={p}"
+        if scheme == "mesh" and p == max(MESH_PS):
+            # largest mesh run also emits its per-wave device trace
+            env[_TRACE_ENV] = str(root / "mesh_comm.trace.json")
         res = subprocess.run(
             [sys.executable, __file__, _CHILD, scheme, str(p), str(n)],
             capture_output=True, text=True, env=env, timeout=1800)
@@ -122,7 +137,6 @@ def main() -> int:
     summa_growth = (summa[s_hi]["coll_bytes_per_dev"]
                     / max(1, summa[s_lo]["coll_bytes_per_dev"]))
     out = {
-        "bench": "mesh_comm",
         "metric": "max per-device fetched bytes (mesh engine counters) "
                   "vs per-device HLO collective bytes (SpSUMMA)",
         "quick": bool(args.quick),
@@ -131,8 +145,11 @@ def main() -> int:
         "flat_2_to_8": mesh_growth <= 2.0,
         "summa_coll_growth_4_to_16": summa_growth,
     }
-    path = pathlib.Path(__file__).parents[1] / args.out
-    path.write_text(json.dumps(out, indent=2) + "\n")
+    path = write_artifact(
+        root / args.out, "mesh_comm", out,
+        params={"quick": bool(args.quick), "scale": scale, "bs": 8,
+                "leaf_n": 32, "mesh_ps": list(MESH_PS),
+                "summa_ps": list(SUMMA_PS)})
     print(f"\nparent-worker fetch growth {lo}->{hi} devs: "
           f"{mesh_growth:.2f}x (flat within 2x: {out['flat_2_to_8']})")
     print(f"SpSUMMA collective growth {s_lo}->{s_hi} devs: "

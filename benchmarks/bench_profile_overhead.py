@@ -1,0 +1,172 @@
+"""Tracing overhead guard: observability must be (nearly) free.
+
+Two contracts from DESIGN.md §8, asserted here and tracked as a CI
+artifact:
+
+1. **Traced runs stay cheap** — ``Session(trace=True)`` on the
+   bench_expr_reuse overhead workload (banded eager multiply, wall time
+   dominated by task registration) adds < 3% over the untraced default
+   (min-of-N timings, alternating order, same twin estimators as
+   bench_expr_reuse).
+2. **The no-op path is free and inert** — the default ``NOOP`` tracer's
+   span context manager costs nanoseconds per call (measured directly),
+   which over the span count of the traced run amounts to ~0% of the
+   untraced wall time; and tracing changes the task program not at all
+   (``task_counts()`` identical with tracing on and off).
+
+Writes ``BENCH_profile_overhead.json`` (``--out``) plus a
+Perfetto-loadable ``profile_overhead.trace.json`` from the traced run.
+``--quick`` shrinks sizes for CI.
+"""
+import argparse
+import json
+import pathlib
+import time
+
+try:
+    from benchmarks._artifact import write_artifact
+except ImportError:                     # run directly from benchmarks/
+    from _artifact import write_artifact
+
+
+def bench_traced(n: int, d: int, leaf_n: int, bs: int, repeats: int
+                 ) -> dict:
+    """Traced vs untraced eager multiply, min-of-N + median-pair."""
+    from repro import Session
+    from repro.core.patterns import banded_mask, values_for_mask
+
+    a = values_for_mask(banded_mask(n, d), seed=1)
+
+    def run(trace):
+        sess = Session(leaf_n=leaf_n, bs=bs, trace=trace)
+        A = sess.from_dense(a)
+        _ = A @ A
+        return sess
+
+    # identity: the no-op/traced paths register the same task program
+    off, on = run(False), run(True)
+    assert off.task_counts() == on.task_counts(), \
+        "tracing changed the task graph"
+    n_spans = len(on.tracer.spans)
+
+    times = {"off": [], "on": []}
+    pair = (("off", False), ("on", True))
+    for r in range(repeats):
+        # alternate order per repeat so drift hits both sides equally
+        for name, tr in (pair if r % 2 == 0 else pair[::-1]):
+            t0 = time.perf_counter()
+            run(tr)
+            times[name].append(time.perf_counter() - t0)
+    t_off, t_on = min(times["off"]), min(times["on"])
+    # twin estimators (see bench_expr_reuse.bench_overhead): ratio of
+    # min-of-N floors, and median of back-to-back pair ratios; a real
+    # overhead shifts both, a one-sided noise burst only one
+    ratios = sorted(o / f for o, f in zip(times["on"], times["off"]))
+    med_pair = ratios[len(ratios) // 2]
+    return {
+        "n": n, "d": d, "leaf_n": leaf_n, "bs": bs, "repeats": repeats,
+        "n_spans": n_spans,
+        "off_s": t_off, "on_s": t_on,
+        "overhead_min": t_on / t_off - 1.0,
+        "overhead_median_pair": med_pair - 1.0,
+        "overhead": min(t_on / t_off, med_pair) - 1.0,
+        "off_s_all": times["off"], "on_s_all": times["on"],
+    }
+
+
+def bench_noop_span(iters: int) -> dict:
+    """Per-call cost of the span context manager, no-op vs live."""
+    from repro.obs import NOOP, Tracer
+
+    def loop(tracer):
+        span = tracer.span
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            with span("x"):
+                pass
+        return time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        pass
+    t_empty = time.perf_counter() - t0
+    t_noop = min(loop(NOOP) for _ in range(5))
+    live = Tracer()
+    t_live = loop(live)
+    live.clear()
+    return {
+        "iters": iters,
+        "empty_loop_ns": t_empty / iters * 1e9,
+        "noop_span_ns": t_noop / iters * 1e9,
+        "live_span_ns": t_live / iters * 1e9,
+    }
+
+
+def write_trace(n: int, d: int, leaf_n: int, bs: int,
+                path: pathlib.Path) -> int:
+    """One traced run (build + multiply + simulate) -> Perfetto JSON."""
+    from repro import Session
+    from repro.core.patterns import banded_mask, values_for_mask
+    from repro.obs import span_events, write_chrome_trace
+
+    a = values_for_mask(banded_mask(n, d), seed=1)
+    sess = Session(leaf_n=leaf_n, bs=bs, trace=True)
+    A = sess.from_dense(a)
+    _ = A @ A
+    sess.simulate(p=4)
+    write_chrome_trace(path, span_events(sess.tracer))
+    return len(sess.tracer.spans)
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true",
+                    help="CI-sized: smaller matrix, fewer repeats")
+    ap.add_argument("--out", type=pathlib.Path,
+                    default=pathlib.Path("BENCH_profile_overhead.json"))
+    ap.add_argument("--trace-out", type=pathlib.Path,
+                    default=pathlib.Path("profile_overhead.trace.json"))
+    args = ap.parse_args()
+
+    d, leaf_n, bs = 48, 64, 8
+    if args.quick:
+        n, repeats, iters = 512, 15, 50_000
+    else:
+        n, repeats, iters = 1024, 25, 200_000
+
+    traced = bench_traced(n, d, leaf_n, bs, repeats)
+    noop = bench_noop_span(iters)
+    trace_spans = write_trace(n, d, leaf_n, bs, args.trace_out)
+    # the no-op contribution over this workload's span count, as a
+    # fraction of the untraced wall time — the "~0%" claim, quantified
+    noop_frac = (noop["noop_span_ns"] * 1e-9 * traced["n_spans"]
+                 / traced["off_s"])
+
+    rec = {"traced": traced, "noop": noop,
+           "noop_workload_fraction": noop_frac,
+           "trace_json_spans": trace_spans}
+    printable = dict(rec, traced={k: v for k, v in traced.items()
+                                  if not k.endswith("_all")})
+    print(json.dumps(printable, indent=1, sort_keys=True))
+    write_artifact(args.out, "profile_overhead", rec,
+                   params={"quick": args.quick, "n": n, "d": d,
+                           "leaf_n": leaf_n, "bs": bs,
+                           "repeats": repeats, "noop_iters": iters})
+    print(f"wrote {args.out} and {args.trace_out}")
+
+    ov = traced["overhead"]
+    assert ov < 0.03, \
+        f"Session(trace=True) adds {ov * 100:.1f}% over the untraced " \
+        f"run (budget: 3%)"
+    assert noop_frac < 1e-3, \
+        f"no-op tracer costs {noop_frac * 100:.3f}% of the workload " \
+        f"(budget: 0.1%)"
+    print(f"traced overhead {ov * 100:+.2f}% "
+          f"(noop span {noop['noop_span_ns']:.0f} ns/call, "
+          f"{noop_frac * 100:.4f}% of workload)")
+    return 0
+
+
+if __name__ == "__main__":
+    import sys
+    sys.exit(main())

@@ -27,7 +27,6 @@ non-increasing in tau (communication gets a small scheduler-noise
 tolerance).  ``--quick`` runs a reduced sweep sized for CI.
 """
 import argparse
-import json
 import math
 import pathlib
 
@@ -38,6 +37,11 @@ from repro.core import analysis as an
 from repro.core.patterns import (banded_mask, divide_space_order,
                                  overlap_mask, particle_cloud, random_mask,
                                  values_for_mask)
+
+try:
+    from benchmarks._artifact import write_artifact
+except ImportError:                     # run directly from benchmarks/
+    from _artifact import write_artifact
 
 TAUS = (0.0, 1e-8, 1e-6, 1e-4, 1e-3, 1e-2, 1e-1)
 TAUS_QUICK = (0.0, 1e-6, 1e-3, 1e-1)
@@ -255,13 +259,16 @@ def main() -> None:
               f"flops x{reduced['flops']:.3f}, bytes x{reduced['bytes']:.3f},"
               f" tasks x{reduced['tasks']:.3f}", flush=True)
 
-    doc = {"bench": "truncation", "quick": args.quick,
-           "taus": list(taus), "curves": curves,
-           "asserts": {"error_le_bound": True, "flops_monotone": True,
-                       "tasks_monotone": True, "comm_demand_monotone": True,
-                       "replayed_bytes_rtol": 0.25}}
     if args.out:
-        args.out.write_text(json.dumps(doc, indent=1, sort_keys=True))
+        write_artifact(
+            args.out, "truncation",
+            {"quick": args.quick, "taus": list(taus), "curves": curves,
+             "asserts": {"error_le_bound": True, "flops_monotone": True,
+                         "tasks_monotone": True,
+                         "comm_demand_monotone": True,
+                         "replayed_bytes_rtol": 0.25}},
+            params={"quick": args.quick, "taus": list(taus),
+                    "patterns": args.patterns})
         print(f"wrote {args.out}")
 
 

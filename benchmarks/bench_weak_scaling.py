@@ -9,12 +9,16 @@ CSV: op,workers,N,wall_s,gflop,speedup_vs_multiply,parallel_eff,
 critical_path_ms,brent_bound_s.
 """
 import argparse
-import json
 import pathlib
 
 from repro import Session
 from repro.core import analysis as an
 from repro.core.patterns import banded_mask, values_for_mask
+
+try:
+    from benchmarks._artifact import write_artifact
+except ImportError:                     # run directly from benchmarks/
+    from _artifact import write_artifact
 
 
 def run(op, workers, n_per, d, leaf_n, bs):
@@ -62,9 +66,9 @@ def main() -> None:
                   f"{cp['critical_path_s'] * 1e3:.2f},"
                   f"{cp['brent_bound_s']:.4f}", flush=True)
     if args.out:
-        args.out.write_text(json.dumps(
-            {"bench": "weak_scaling", "records": records},
-            indent=1, sort_keys=True))
+        write_artifact(args.out, "weak_scaling", {"records": records},
+                       params={"n_per": n_per, "d": d,
+                               "workers": [1, 2, 4, 8]})
         print(f"wrote {args.out}")
 
     # symmetric square clearly faster (paper Fig 9 right; its ~2x flop

@@ -36,6 +36,8 @@ BENCHES = [
      "SpAMM truncated multiply: flops/comm-vs-error tau sweep"),
     ("bench_expr_reuse", ["--out", "BENCH_expr_reuse.json"],
      "compiled-Plan reuse: flat purification iterations, <5% overhead"),
+    ("bench_profile_overhead", ["--out", "BENCH_profile_overhead.json"],
+     "tracing overhead guard: <3% traced, ~0% no-op"),
 ]
 
 QUICK = [
@@ -47,6 +49,9 @@ QUICK = [
      "quick compiled-Plan reuse sweep (flat-iteration + overhead guard)"),
     ("bench_mesh_comm", ["--quick", "--out", "BENCH_mesh_comm.json"],
      "quick mesh-executor fetch-volume sweep (Table-1 shape guard)"),
+    ("bench_profile_overhead",
+     ["--quick", "--out", "BENCH_profile_overhead.json"],
+     "quick tracing overhead guard (<3% traced, ~0% no-op)"),
 ]
 
 

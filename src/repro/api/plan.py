@@ -35,6 +35,7 @@ Key invariants:
 """
 from __future__ import annotations
 
+import time
 from typing import Optional
 
 import numpy as np
@@ -44,6 +45,7 @@ from repro.core.multiply import (TruncationReport, qt_add, qt_multiply,
                                  qt_sym_square, qt_syrk, qt_transpose)
 from repro.core.quadtree import (PlanStructureError, qt_invalidate_caches,
                                  qt_rebind_dense, qt_rebind_from)
+from repro.obs.metrics import from_engine_stats, from_truncation
 
 from .expr import (Add, Expr, Input, MatMul, Scale, SymMul, SymSquare,
                    Syrk, Transpose)
@@ -131,6 +133,12 @@ class Plan:
         self.out_upper = False
         self.nodes: Optional[range] = None  # registered nid range
         self.n_runs = 0
+        # observability (DESIGN.md §8): wall time of the lowering run vs
+        # each zero-task replay, and the engine wave-log index at first
+        # execution so profile() can slice out this plan's waves
+        self.compile_s = 0.0
+        self.replay_s: list[float] = []
+        self._wave0 = 0
         # plans this one delegated to after a structure-mismatch rebind
         # with recompile=True, keyed by their cache key: later runs with
         # the same new structure replay these instead of compiling again
@@ -176,18 +184,39 @@ class Plan:
         return self._run(by_slot, recompile=recompile)
 
     def _run(self, by_slot: dict, recompile: bool = False) -> "Matrix":
+        tr = self.session.tracer
+        if not tr.enabled:
+            return self._run_inner(by_slot, recompile, None)
+        with tr.span("plan.run", track="plan", key=self.key[:10],
+                     bound=len(by_slot)) as sp:
+            return self._run_inner(by_slot, recompile, sp)
+
+    def _run_inner(self, by_slot: dict, recompile: bool,
+                   sp) -> "Matrix":
+        tr = self.session.tracer
         try:
-            self._rebind(by_slot)
+            with tr.span("plan.rebind", track="plan", slots=len(by_slot)):
+                self._rebind(by_slot)
         except PlanStructureError:
             # rebinds are atomic (validate-then-fill), so the compiled
             # inputs are untouched and this plan stays runnable
             if not recompile:
                 raise
             return self._recompile_run(by_slot)
-        if self.nodes is None:
-            self._execute_first()
+        first = self.nodes is None
+        t0 = time.perf_counter()
+        if first:
+            with tr.span("plan.compile", track="plan") as csp:
+                self._execute_first()
+                csp.set(tasks=len(self.nodes))
+            self.compile_s = time.perf_counter() - t0
         else:
-            self._replay()
+            with tr.span("plan.replay", track="plan",
+                         tasks=len(self.nodes)):
+                self._replay()
+            self.replay_s.append(time.perf_counter() - t0)
+        if sp is not None:
+            sp.set(first=first, tasks=len(self.nodes))
         self.n_runs += 1
         return self._handle()
 
@@ -286,6 +315,10 @@ class Plan:
 
     def _execute_first(self) -> None:
         sess, g = self.session, self.session.graph
+        # drain earlier pending waves so the wave-log slice profile()
+        # reads contains only this plan's work
+        g.flush()
+        self._wave0 = len(getattr(g.engine, "_waves", ()))
         n0 = len(g.nodes)
         self.out_node = lower(sess, self.expr, self.params, self.reports,
                               use_transpose_cache=False)
@@ -351,6 +384,44 @@ class Plan:
                          only=sched.unsimulated_closure(g, self.nodes))
 
     # -- reporting -----------------------------------------------------------
+    def profile(self) -> dict:
+        """Per-plan profile in the unified metrics schema (DESIGN.md §8).
+
+        Returns compile vs replay wall time, the engine waves this plan's
+        program produced (batch sizes, padding waste, bytes packed), and
+        the unified counter sets — the leaf engine's (measured per-device
+        bytes under ``engine="mesh"``) plus one per truncated product.
+        Works on any engine; the wave list is empty on the immediate
+        numpy backend.
+        """
+        sess = self.session
+        sess.flush()
+        stats = sess.graph.engine.stats()
+        waves = list(stats.get("wave_log", ()))[self._wave0:]
+        metric_sets = [from_engine_stats(stats)]
+        metric_sets += [from_truncation(r) for r in self.reports
+                        if r.tau > 0.0]
+        return {
+            "schema": 1,
+            "plan": self.key[:16],
+            "inputs": list(self.input_names),
+            "runs": self.n_runs,
+            "n_tasks": self.n_tasks,
+            "compile_s": self.compile_s,
+            "replay_s": list(self.replay_s),
+            "waves": [{
+                "kernel": w.get("kernel"), "bs": w.get("bs"),
+                "tasks": w.get("tasks"), "pairs": w.get("pairs"),
+                "padded_pairs": w.get("padded_pairs"),
+                "padding_waste": (
+                    (w.get("padded_pairs", 0) - w.get("pairs", 0))
+                    / max(w.get("padded_pairs", 0), 1)),
+                "bytes_packed": w.get("bytes_packed"),
+                "wall_s": w.get("wall_s"),
+            } for w in waves],
+            "metrics": [ms.to_dict() for ms in metric_sets],
+        }
+
     @property
     def n_tasks(self) -> int:
         """Tasks the compiled program registered (constant across runs)."""

@@ -37,6 +37,7 @@ need::
 """
 from __future__ import annotations
 
+import contextlib
 from typing import Any, Callable, Optional, Union
 
 import numpy as np
@@ -45,6 +46,8 @@ from repro.core.engine import LeafEngine
 from repro.core.quadtree import (QTParams, qt_from_coo, qt_from_dense,
                                  qt_structure_fp)
 from repro.core.tasks import CostModel, CTGraph
+from repro.obs.metrics import MetricSet, from_engine_stats, from_sim_report
+from repro.obs.tracer import Tracer, as_tracer
 from repro.runtime.scheduler import PLACEMENTS
 
 from .expr import (Expr, Transpose, expr_upper, fingerprint, rewrite)
@@ -118,6 +121,15 @@ class Session:
     cost, cache_bytes, seed, dedup : forwarded to the runtime
         :class:`~repro.runtime.scheduler.Scheduler` / chunk store
         (``dedup=True`` enables content-hash chunk deduplication).
+    trace : ``False`` (default) keeps the shared no-op tracer — zero
+        recording, no behavioural change.  ``True`` records structured
+        spans (:mod:`repro.obs.tracer`) across the whole stack:
+        ``session.simulate``, ``plan.compile``/``plan.run``,
+        ``engine.wave``, ``kernel.dispatch``, ``collective.ppermute``.
+        A :class:`~repro.obs.tracer.Tracer` instance is also accepted
+        (shared across sessions).  See also :meth:`tracing` for scoped
+        tracing and :meth:`metrics` for the unified counter view
+        (DESIGN.md §8).
     """
 
     def __init__(self, engine: Any = "numpy",
@@ -126,8 +138,10 @@ class Session:
                  cost: Optional[CostModel] = None,
                  cache_bytes: int = 1 << 62, seed: int = 0,
                  dedup: bool = False, tau: float = 0.0,
-                 lazy: bool = False):
+                 lazy: bool = False, trace: Any = False):
         self.graph = CTGraph(engine=_validate_engine(engine))
+        self.tracer = as_tracer(trace)
+        self.graph.tracer = self.tracer
         self.leaf_n = leaf_n
         self.bs = bs
         self.placement = _normalize_placement(placement)
@@ -149,6 +163,8 @@ class Session:
         self._structfp: dict[Optional[int], str] = {}
         # input root node id -> user-chosen plan slot name
         self._input_names: dict[int, str] = {}
+        # most recent SimReport (feeds Session.metrics)
+        self._last_report = None
 
     def __repr__(self) -> str:
         eng = getattr(self.graph, "_engine_spec", None)
@@ -348,7 +364,19 @@ class Session:
         if sched.store is None:     # first run: session defaults apply
             p = p or self.p
             placement = placement or self.placement
-        return sched.run(self.graph, n_workers=p, placement=placement)
+        if self.tracer.enabled:
+            with self.tracer.span("session.simulate", track="session",
+                                  p=p, placement=placement,
+                                  fresh_stats=fresh_stats) as sp:
+                rep = sched.run(self.graph, n_workers=p,
+                                placement=placement)
+                sp.set(makespan_s=rep.makespan,
+                       tasks=sum(rep.tasks_per_worker),
+                       bytes_received=sum(rep.bytes_received))
+        else:
+            rep = sched.run(self.graph, n_workers=p, placement=placement)
+        self._last_report = rep
+        return rep
 
     def reset_stats(self) -> None:
         """Zero per-worker comm counters; placements persist (§7)."""
@@ -436,6 +464,47 @@ class Session:
         """Leaf-engine report (batched waves, padding, kernel wall time)."""
         self.flush()
         return self.graph.engine.stats()
+
+    # -- observability (DESIGN.md §8) ----------------------------------------
+    @contextlib.contextmanager
+    def tracing(self, tracer: Optional[Tracer] = None):
+        """Record spans for the enclosed block only.
+
+        >>> sess = Session(engine="pallas")
+        >>> with sess.tracing() as tr:          # doctest: +SKIP
+        ...     C = (A @ B).to_dense()
+        >>> tr.find("engine.wave")              # doctest: +SKIP
+
+        The previous tracer (usually the shared no-op) is restored on
+        exit, even on error.
+        """
+        prev = self.tracer
+        tr = tracer if tracer is not None else Tracer()
+        self._set_tracer(tr)
+        try:
+            yield tr
+        finally:
+            self._set_tracer(prev)
+
+    def _set_tracer(self, tracer) -> None:
+        self.tracer = tracer
+        self.graph.tracer = tracer
+
+    def metrics(self) -> list[MetricSet]:
+        """Unified counter view of everything this session observed.
+
+        One :class:`~repro.obs.metrics.MetricSet` per active source, all
+        in the same ``{name, unit, per_worker[], total}`` schema: the
+        leaf engine's wave/communication counters (measured per-device
+        bytes under ``engine="mesh"`` — the Table-1 metric) and, when
+        :meth:`simulate` has run, the simulator's per-worker counters
+        from the most recent report (identical values to the legacy
+        :class:`~repro.runtime.scheduler.SimReport` fields).
+        """
+        out = [from_engine_stats(self.engine_stats())]
+        if self._last_report is not None:
+            out.append(from_sim_report(self._last_report))
+        return out
 
 
 def _first_input_n(e: Expr) -> int:

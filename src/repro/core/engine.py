@@ -50,6 +50,7 @@ from .leaf import (LeafMatrix, LeafStats, alloc_structure, leaf_add,
                    leaf_multiply, leaf_scale, leaf_sym_multiply,
                    leaf_sym_square, leaf_syrk, unpack_blocks)
 from .quadtree import MatrixChunk
+from repro.obs.tracer import NOOP
 
 
 @dataclasses.dataclass(frozen=True)
@@ -88,6 +89,9 @@ class LeafEngine:
     """Backend interface consumed by :class:`~repro.core.tasks.CTGraph`."""
 
     name = "abstract"
+    #: observability hook; stateful backends resolve the bound graph's
+    #: tracer instead (see PallasEngine.tracer)
+    tracer = NOOP
 
     def execute(self, g, node, payload: LeafPayload) -> Optional[MatrixChunk]:
         """Execute (or defer) one leaf task; returns its chunk or None=NIL."""
@@ -387,6 +391,12 @@ class PallasEngine(LeafEngine):
 
     name = "pallas"
 
+    @property
+    def tracer(self):
+        """The bound graph's tracer (NOOP until bound / when tracing off)."""
+        g = self._graph
+        return getattr(g, "tracer", NOOP) if g is not None else NOOP
+
     def __init__(self, kernel: str = "pairs",
                  interpret: Optional[bool] = None, block_t: int = 8,
                  validate_structure: bool = False):
@@ -647,12 +657,25 @@ class PallasEngine(LeafEngine):
         out.norm2 = None
         out.trace = None
 
+    def _wave_span_attrs(self) -> dict:
+        """Attributes of the just-committed wave for its engine.wave span."""
+        w = self._waves[-1]
+        return {k: w[k] for k in ("kernel", "bs", "tasks", "pairs",
+                                  "padded_pairs", "c_blocks", "bytes_packed")
+                if k in w}
+
     def _run_wave(self, wave: list[_Pending]) -> None:
         groups: dict[int, list[_Pending]] = {}
         for t in wave:
             groups.setdefault(t.out.bs, []).append(t)
+        tr = self.tracer
         for bs, tasks in sorted(groups.items()):
-            self._run_group(bs, tasks)
+            if tr.enabled:
+                with tr.span("engine.wave", track="engine") as sp:
+                    self._run_group(bs, tasks)
+                    sp.set(**self._wave_span_attrs())
+            else:
+                self._run_group(bs, tasks)
             # commit this group immediately: a failure in a *later* group
             # must not leave these tasks pending, or a retrying flush would
             # re-run them and double-count their wave record in stats()
@@ -713,24 +736,27 @@ class PallasEngine(LeafEngine):
         sa, sb, seg = sa[order], sb[order], seg[order]
 
         t0 = time.perf_counter()
-        if self.kernel == "pairs":
-            c = kops.bsmm_pairs(
-                jnp.asarray(a_pack), jnp.asarray(b_pack),
-                jnp.asarray(sa), jnp.asarray(sb),
-                jnp.asarray(seg), cap_c=n_slots, use_pallas=True,
-                interpret=self.interpret)
-            c = np.asarray(c)
-            padded = n_pairs
-        else:
-            # host gather feeds the cuBLAS-shaped batch; batched_gemm
-            # zero-pads to a block_t multiple internally
-            prods = np.asarray(kops.batched_gemm(
-                jnp.asarray(a_pack[sa]), jnp.asarray(b_pack[sb]),
-                block_t=self.block_t, use_pallas=True,
-                interpret=self.interpret))
-            c = np.zeros((n_slots, bs, bs), np.float32)
-            np.add.at(c, seg, prods)
-            padded = n_pairs + (-n_pairs) % self.block_t
+        with self.tracer.span("kernel.dispatch", track="engine",
+                              kernel=self.kernel, bs=bs,
+                              pairs=int(n_pairs), c_blocks=int(n_slots)):
+            if self.kernel == "pairs":
+                c = kops.bsmm_pairs(
+                    jnp.asarray(a_pack), jnp.asarray(b_pack),
+                    jnp.asarray(sa), jnp.asarray(sb),
+                    jnp.asarray(seg), cap_c=n_slots, use_pallas=True,
+                    interpret=self.interpret)
+                c = np.asarray(c)
+                padded = n_pairs
+            else:
+                # host gather feeds the cuBLAS-shaped batch; batched_gemm
+                # zero-pads to a block_t multiple internally
+                prods = np.asarray(kops.batched_gemm(
+                    jnp.asarray(a_pack[sa]), jnp.asarray(b_pack[sb]),
+                    block_t=self.block_t, use_pallas=True,
+                    interpret=self.interpret))
+                c = np.zeros((n_slots, bs, bs), np.float32)
+                np.add.at(c, seg, prods)
+                padded = n_pairs + (-n_pairs) % self.block_t
         wall = time.perf_counter() - t0
 
         self._waves.append({

@@ -153,6 +153,23 @@ def qt_multiply(g: CTGraph, params: QTParams, a: Optional[int],
     (pinned by tests/test_truncation.py): no flush, no norm reads, no
     pruning — the strict ``< tau`` test can never fire.
     """
+    # root-entry span (recursive calls see subtree dimensions < params.n);
+    # instrumentation only — registration is identical either way
+    tr = g.tracer
+    if tr.enabled and not g.is_nil(a) and g.value_of(a).n == params.n:
+        n0 = len(g.nodes)
+        with tr.span("qt.multiply", track="graph", n=params.n, tau=tau,
+                     ta=ta, tb=tb) as sp:
+            nid = _qt_multiply(g, params, a, b, ta, tb, tau, trunc)
+            sp.set(tasks=len(g.nodes) - n0, nil=nid is None)
+        return nid
+    return _qt_multiply(g, params, a, b, ta, tb, tau, trunc)
+
+
+def _qt_multiply(g: CTGraph, params: QTParams, a: Optional[int],
+                 b: Optional[int], ta: bool = False, tb: bool = False,
+                 tau: float = 0.0,
+                 trunc: Optional[TruncationReport] = None) -> Optional[int]:
     if g.is_nil(a) or g.is_nil(b):
         return None
     ac: MatrixChunk = g.value_of(a)

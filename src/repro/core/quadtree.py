@@ -157,6 +157,14 @@ def qt_from_dense(g: CTGraph, a: np.ndarray, params: QTParams,
 
         return g.register_task("create", fn, [])
 
+    tr = g.tracer
+    if tr.enabled:
+        n0 = len(g.nodes)
+        with tr.span("qt.from_dense", track="graph", n=params.n,
+                     leaf_n=params.leaf_n, bs=params.bs) as sp:
+            nid = build(a, upper)
+            sp.set(tasks=len(g.nodes) - n0, nil=nid is None)
+        return nid
     return build(a, upper)
 
 
@@ -218,6 +226,15 @@ def qt_from_coo(g: CTGraph, rows: np.ndarray, cols: np.ndarray,
 
         return g.register_task("create", fn, [])
 
+    tr = g.tracer
+    if tr.enabled:
+        n0 = len(g.nodes)
+        with tr.span("qt.from_coo", track="graph", n=params.n,
+                     nnz=int(len(np.asarray(rows)))) as sp:
+            nid = build(np.asarray(rows), np.asarray(cols), params.n,
+                        0, 0, upper)
+            sp.set(tasks=len(g.nodes) - n0, nil=nid is None)
+        return nid
     return build(np.asarray(rows), np.asarray(cols), params.n, 0, 0, upper)
 
 

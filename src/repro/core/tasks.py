@@ -37,6 +37,7 @@ import random
 from typing import Any, Callable, Optional
 
 from .chunks import ChunkStore, ChunkId
+from repro.obs.tracer import NOOP
 
 NILVAL = None
 
@@ -100,6 +101,9 @@ class CTGraph:
         self._parent: Optional[int] = None
         self._engine_spec = engine
         self._engine: Any = None
+        # observability: a no-op tracer unless Session(trace=...) swaps in
+        # a recording one; instrumentation never alters graph structure
+        self.tracer = NOOP
 
     @property
     def engine(self):
@@ -112,7 +116,11 @@ class CTGraph:
     def flush(self) -> None:
         """Execute any deferred leaf work (batched waves on the engine)."""
         if self._engine is not None:
-            self._engine.flush(self)
+            if self.tracer.enabled:
+                with self.tracer.span("engine.flush", track="engine"):
+                    self._engine.flush(self)
+            else:
+                self._engine.flush(self)
 
     # -- core API used by the matrix library --------------------------------
     def register_task(self, kind: str, fn: Optional[Callable[..., Any]],

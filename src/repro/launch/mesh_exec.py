@@ -133,6 +133,12 @@ class MeshEngine(PallasEngine):
         n_dev = self.n_dev
         bsz = bs * bs * 4               # float32 wire format
         t0 = time.perf_counter()
+        # per-device counter snapshot: the wave's comm_log entry (and its
+        # engine.wave span) carries this wave's deltas, not the running sums
+        fetched0 = self._fetched_bytes.copy()
+        fblocks0 = self._fetched_blocks.copy()
+        pushed0 = self._pushed_bytes.copy()
+        coll0 = self._collective_bytes.copy()
 
         # 1. task ownership: contiguous balanced split in registration
         # (quadtree DFS ~ Morton) order — core.distributed's closed form
@@ -286,8 +292,17 @@ class MeshEngine(PallasEngine):
             body, mesh=mesh,
             in_specs=(spec,) * (4 + len(sels)),
             out_specs=spec, check_rep=False)
-        c_dev = jax.jit(fn)(own_pool, sa, sb, seg, *sels)
-        c_np = np.asarray(c_dev)
+        tr = self.tracer
+        if tr.enabled and shifts:
+            tr.instant("collective.ppermute", track="engine",
+                       shifts=len(shifts),
+                       shipped_blocks=int(sum(len(lst) for s in shifts
+                                              for lst in ship[s])),
+                       padded_shipped_blocks=int(sum(cnts) * n_dev))
+        with tr.span("kernel.dispatch", track="engine", kernel=kernel,
+                     bs=bs, n_dev=n_dev, pairs=int(n_pairs)):
+            c_dev = jax.jit(fn)(own_pool, sa, sb, seg, *sels)
+            c_np = np.asarray(c_dev)
 
         # 7. scatter into the placeholder out leaves; produced blocks are
         # now resident on their owner (backed by the retained shard ref)
@@ -318,7 +333,24 @@ class MeshEngine(PallasEngine):
             "fetched_blocks": int(fetched_now),
             "pool_len": int(pool_len), "cap_c": int(cap_c),
             "wall_s": wall,
+            # this wave's measured per-device counter deltas (exported as
+            # Perfetto counter tracks; see obs/export.mesh_stats_events)
+            "fetched_bytes_by_dev": (self._fetched_bytes - fetched0).tolist(),
+            "fetched_blocks_by_dev": (self._fetched_blocks - fblocks0).tolist(),
+            "pushed_bytes_by_dev": (self._pushed_bytes - pushed0).tolist(),
+            "collective_bytes_by_dev": (self._collective_bytes - coll0).tolist(),
         })
+
+    def _wave_span_attrs(self) -> dict:
+        """Wave span attrs: batch shape plus this wave's per-device comm
+        deltas (the Table-1 metric, measured)."""
+        attrs = super()._wave_span_attrs()
+        c = self._comm_log[-1]
+        attrs.update({k: c[k] for k in
+                      ("n_dev", "shifts", "shipped_blocks",
+                       "fetched_bytes_by_dev", "pushed_bytes_by_dev",
+                       "collective_bytes_by_dev")})
+        return attrs
 
     # -- lifecycle -----------------------------------------------------------
     def free_chunks(self, g, nids) -> None:

@@ -1,6 +1,14 @@
 """Collate dry-run JSONs into the EXPERIMENTS.md §Dry-run/§Roofline tables.
 
     PYTHONPATH=src python -m repro.launch.report experiments/dryrun
+
+Passing a file instead of a directory renders it as a summary table:
+a ``BENCH_mesh_comm.json`` artifact becomes the measured-communication
+table, and any unified-metrics JSON (DESIGN.md §8 schema, as produced
+by ``MetricSet.to_dict()`` / ``Plan.profile()``) becomes a per-counter
+table.
+
+    PYTHONPATH=src python -m repro.launch.report BENCH_mesh_comm.json
 """
 from __future__ import annotations
 
@@ -54,9 +62,66 @@ def roofline_table(rows) -> str:
     return "\n".join(out)
 
 
+def metrics_table(metric_sets) -> str:
+    """Unified-metrics schema (DESIGN.md §8) -> one markdown table.
+
+    Accepts ``MetricSet`` objects or their ``to_dict()`` documents; a
+    ``Plan.profile()`` document's ``metrics`` list works directly.
+    """
+    out = ["| source | counter | unit | total | max/worker | workers |",
+           "|---|---|---|---|---|---|"]
+    for ms in metric_sets:
+        doc = ms.to_dict() if hasattr(ms, "to_dict") else ms
+        for c in doc["counters"]:
+            pw = c["per_worker"]
+            out.append(
+                f"| {doc['source']} | {c['name']} | {c['unit']} | "
+                f"{c['total']:g} | {max(pw):g} | {len(pw)} |")
+    return "\n".join(out)
+
+
+def mesh_comm_table(doc) -> str:
+    """BENCH_mesh_comm.json artifact -> measured-communication table."""
+    out = ["| scheme | p | N | max fetched B/dev | max collective B/dev "
+           "| waves |",
+           "|---|---|---|---|---|---|"]
+    for r in doc["records"]:
+        if r["scheme"] == "mesh":
+            out.append(
+                f"| mesh | {r['p']} | {r['n']} | "
+                f"{r['max_fetched_bytes_per_dev']} | "
+                f"{r['max_collective_bytes_per_dev']} | {r['waves']} |")
+        else:
+            out.append(
+                f"| summa | {r['p']} | {r['n']} | - | "
+                f"{r['coll_bytes_per_dev']} | pgrid {r['pgrid']} |")
+    out.append("")
+    out.append(f"mesh fetch growth 2->8 devs: "
+               f"{doc['mesh_fetch_growth_2_to_8']:.2f}x "
+               f"(flat within 2x: {doc['flat_2_to_8']}); "
+               f"SpSUMMA collective growth 4->16 devs: "
+               f"{doc['summa_coll_growth_4_to_16']:.2f}x")
+    return "\n".join(out)
+
+
 def main() -> None:
-    outdir = sys.argv[1] if len(sys.argv) > 1 else "experiments/dryrun"
-    rows = load(outdir)
+    target = pathlib.Path(sys.argv[1] if len(sys.argv) > 1
+                          else "experiments/dryrun")
+    if target.is_file():
+        doc = json.loads(target.read_text())
+        if doc.get("bench") == "mesh_comm":
+            print(f"## Measured mesh communication ({target.name})\n")
+            print(mesh_comm_table(doc))
+        elif "counters" in doc:
+            print(f"## Metrics ({target.name})\n")
+            print(metrics_table([doc]))
+        elif "metrics" in doc:       # a Plan.profile() document
+            print(f"## Plan profile metrics ({target.name})\n")
+            print(metrics_table(doc["metrics"]))
+        else:
+            sys.exit(f"unrecognized report input: {target}")
+        return
+    rows = load(target)
     print(f"## Dry-run ({len(rows)} cells)\n")
     print(dryrun_table(rows))
     print("\n## Roofline (single-pod 16x16)\n")

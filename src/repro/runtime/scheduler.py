@@ -117,6 +117,16 @@ class SimReport:
         return parallel_efficiency(self.work_s, self.makespan,
                                    self.n_workers)
 
+    def to_metrics(self):
+        """This report in the unified counter schema (DESIGN.md §8).
+
+        Returns a :class:`~repro.obs.metrics.MetricSet` whose per-worker
+        lists are this report's fields verbatim — ``bytes_received`` is
+        the paper's cache-miss communication metric (Figs 11-13).
+        """
+        from repro.obs.metrics import from_sim_report
+        return from_sim_report(self)
+
     def to_dict(self) -> dict:
         d = {
             "n_workers": self.n_workers,

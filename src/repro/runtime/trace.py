@@ -110,8 +110,10 @@ class Trace:
         rows = [["."] * width for _ in range(self.n_workers)]
         scale = width / span
         for ev in self.events:
-            lo = min(int(ev.start * scale), width - 1)
-            hi = min(int(ev.end * scale), width - 1)
+            # clamp into [0, width-1]: a zero-duration tail event has
+            # start == makespan, which scales to column `width` exactly
+            lo = max(0, min(int(ev.start * scale), width - 1))
+            hi = max(lo, min(int(ev.end * scale), width - 1))
             for c in range(lo, hi + 1):
                 rows[ev.worker][c] = "#"
             if ev.stolen:
@@ -134,7 +136,13 @@ def critical_path(graph, trace: Trace,
     suffices.  Nodes in ``done_before`` (simulated in an earlier phase, e.g.
     the matrix-construction program) contribute zero: the phase starts with
     them already materialised.
+
+    An empty trace — nothing executed this phase, or every node already in
+    ``done_before`` — yields the zero :class:`CriticalPath` rather than
+    raising.
     """
+    if not trace.events:
+        return CriticalPath(work_s=0.0, length_s=0.0, path=[], n_tasks=0)
     done_before = done_before or set()
     dur: dict[int, float] = {}
     for ev in trace.events:
@@ -163,6 +171,6 @@ def critical_path(graph, trace: Trace,
         path.append(cur)
         cur = pred[cur]
     path.reverse()
-    return CriticalPath(work_s=sum(dur.values()),
-                        length_s=finish.get(best_nid, 0.0) if best_nid is not None else 0.0,
+    return CriticalPath(work_s=float(sum(dur.values())),
+                        length_s=finish[best_nid],
                         path=path, n_tasks=len(trace.events))

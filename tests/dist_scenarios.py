@@ -294,6 +294,67 @@ def mesh_engine_counters():
     print("OK mesh_engine_counters")
 
 
+def obs_mesh_pinned():
+    """Unified metrics reproduce the published BENCH_mesh_comm.json
+    record bit-for-bit: re-run its mesh p=4 full-scale cell and compare
+    the engine counters, their MetricSet view, and the Perfetto export
+    against the committed artifact."""
+    import json
+    import pathlib
+
+    import jax
+    from repro import Session
+    from repro.core.patterns import banded_mask, values_for_mask
+    from repro.launch.mesh_exec import MeshEngine
+    from repro.obs import (chrome_trace, from_engine_stats,
+                           mesh_stats_events, validate_metrics)
+
+    n_dev = len(jax.devices())
+    assert n_dev == 4, f"scenario needs 4 forced devices, got {n_dev}"
+    root = pathlib.Path(__file__).parents[1]
+    doc = json.loads((root / "BENCH_mesh_comm.json").read_text())
+    assert not doc["quick"], "published artifact must be the full run"
+    rec = [r for r in doc["records"]
+           if r["scheme"] == "mesh" and r["p"] == 4][0]
+    n = rec["n"]
+
+    # exactly the bench_mesh_comm child's scenario
+    a = values_for_mask(banded_mask(n, 12), seed=1)
+    b = values_for_mask(banded_mask(n, 7), seed=2)
+    sess = Session(engine=MeshEngine(n_dev=4), leaf_n=32, bs=8)
+    A, B = sess.from_dense(a), sess.from_dense(b)
+    C = A @ B
+    np.testing.assert_allclose(C.to_dense(), a @ b, atol=1e-3)
+
+    st = sess.engine_stats()
+    assert max(st["fetched_bytes"]) == rec["max_fetched_bytes_per_dev"]
+    assert sum(st["fetched_blocks"]) == rec["sum_fetched_blocks"]
+    assert max(st["pushed_bytes"]) == rec["max_pushed_bytes_per_dev"]
+    assert max(st["collective_bytes"]) == \
+        rec["max_collective_bytes_per_dev"]
+    assert st["waves"] == rec["waves"]
+
+    # the unified schema carries the same numbers verbatim
+    ms = from_engine_stats(st)
+    assert ms.source == "engine:mesh"
+    validate_metrics(ms.to_dict())
+    assert ms["fetched_bytes"].per_worker == list(st["fetched_bytes"])
+    assert max(ms["fetched_bytes"].per_worker) == \
+        rec["max_fetched_bytes_per_dev"]
+    assert ms["pushed_bytes"].total == sum(st["pushed_bytes"])
+
+    # and the Perfetto export's counter tracks sum back to the totals
+    tr = chrome_trace(mesh_stats_events(st))
+    counters = [e for e in tr["traceEvents"] if e["ph"] == "C"
+                and e["name"].startswith("fetched_bytes")]
+    assert counters, "expected fetched_bytes counter events"
+    last_by_dev = {}
+    for e in sorted(counters, key=lambda e: e["ts"]):
+        last_by_dev[e["tid"]] = e["args"]["bytes"]
+    assert sum(last_by_dev.values()) == sum(st["fetched_bytes"])
+    print("OK obs_mesh_pinned")
+
+
 def summa_pgrid_validation():
     """p=6 regression: non-square device counts fail fast everywhere
     instead of silently sharding onto a 2x2 sub-grid."""
