@@ -38,6 +38,8 @@ BENCHES = [
      "compiled-Plan reuse: flat purification iterations, <5% overhead"),
     ("bench_profile_overhead", ["--out", "BENCH_profile_overhead.json"],
      "tracing overhead guard: <3% traced, ~0% no-op"),
+    ("bench_serve", ["--out", "BENCH_serve.json"],
+     "plan serving: req/s vs coalesced batch size, p50/p95/p99, hit rate"),
 ]
 
 QUICK = [
@@ -52,6 +54,8 @@ QUICK = [
     ("bench_profile_overhead",
      ["--quick", "--out", "BENCH_profile_overhead.json"],
      "quick tracing overhead guard (<3% traced, ~0% no-op)"),
+    ("bench_serve", ["--quick", "--out", "BENCH_serve.json"],
+     "quick serving sweep (hit rate, coalesced throughput, tail latency)"),
 ]
 
 

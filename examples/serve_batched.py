@@ -9,7 +9,7 @@ sliding-window model (ring-buffer-able cache), and an attention-free SSM
 """
 import sys
 
-from repro.launch import serve as S
+from repro.launch import lm_serve as S
 
 
 def main() -> int:

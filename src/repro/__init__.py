@@ -10,9 +10,9 @@ a submodule never drags jax into processes that don't need it.
 """
 
 __all__ = ["Session", "Matrix", "Plan", "PlanStructureError",
-           "api", "core", "runtime"]
+           "api", "core", "runtime", "serve"]
 
-_SUBPACKAGES = ("api", "core", "runtime", "kernels")
+_SUBPACKAGES = ("api", "core", "runtime", "kernels", "serve")
 
 
 def __getattr__(name):

@@ -49,8 +49,13 @@ from repro.obs.metrics import from_engine_stats, from_truncation
 
 from .expr import (Add, Expr, Input, MatMul, Scale, SymMul, SymSquare,
                    Syrk, Transpose)
+from .lru import LRUCache
 
 __all__ = ["Plan", "PlanStructureError", "lower"]
+
+#: recompile successors kept per plan (changing-sparsity iterations walk
+#: a handful of structures; anything past this is a cold recompile again)
+RECOMPILED_CAP = 8
 
 
 def lower(session, expr: Expr, params, reports: list,
@@ -120,11 +125,15 @@ class Plan:
     """
 
     def __init__(self, session, expr: Expr, params, key: str,
-                 input_nids: list, names: list):
+                 input_nids: list, names: list,
+                 struct_key: Optional[str] = None):
         self.session = session
         self.expr = expr                    # rewritten normal form
         self.params = params
         self.key = key
+        # input-identity-free prefix of ``key`` (fingerprint + tau): the
+        # serving layer's cross-session cache groups replicas by it
+        self.struct_key = struct_key if struct_key is not None else key
         self.input_nids = list(input_nids)  # slot order
         self.input_names = list(names)      # slot order, unique
         self.reports: list[TruncationReport] = []
@@ -142,7 +151,9 @@ class Plan:
         # plans this one delegated to after a structure-mismatch rebind
         # with recompile=True, keyed by their cache key: later runs with
         # the same new structure replay these instead of compiling again
-        self._recompiled: dict[str, "Plan"] = {}
+        # (LRU-bounded — unbounded growth was a leak under serving
+        # traffic; evictions roll up into Session.metrics())
+        self._recompiled: LRUCache = LRUCache(cap=RECOMPILED_CAP)
 
     def __repr__(self) -> str:
         state = (f"tasks={len(self.nodes)}" if self.nodes is not None
@@ -151,7 +162,8 @@ class Plan:
                 f"{state}, key={self.key[:10]})")
 
     # -- execution ----------------------------------------------------------
-    def run(self, *, recompile: bool = False, **bindings) -> "Matrix":
+    def run(self, *, recompile: bool = False, flush: bool = True,
+            **bindings) -> "Matrix":
         """Execute the program; returns the result handle.
 
         Keyword arguments rebind input slots by name (the ``name=`` given
@@ -172,8 +184,15 @@ class Plan:
         ``recompile=True`` handles the changing-sparsity regime instead:
         on a structure mismatch the expression is recompiled through the
         session's plan cache against fresh inputs built from the new
-        values, and that plan runs.  ``recompile`` is a reserved keyword:
-        it is never treated as an input-slot name.
+        values, and that plan runs.  ``recompile`` and ``flush`` are
+        reserved keywords: they are never treated as input-slot names.
+
+        ``flush=False`` (deferred engines only) leaves the replayed
+        numeric work pending on the engine instead of dispatching it —
+        the serving front end runs several plans this way, then coalesces
+        their compatible ready waves into shared batched kernel calls
+        (DESIGN.md §9).  The returned handle must not be read back until
+        the graph is flushed.
         """
         unknown = set(bindings) - set(self.input_names)
         if unknown:
@@ -181,18 +200,19 @@ class Plan:
                 f"unknown plan input(s) {sorted(unknown)}; this plan binds "
                 f"{self.input_names}")
         by_slot = {self.input_names.index(k): v for k, v in bindings.items()}
-        return self._run(by_slot, recompile=recompile)
+        return self._run(by_slot, recompile=recompile, flush=flush)
 
-    def _run(self, by_slot: dict, recompile: bool = False) -> "Matrix":
+    def _run(self, by_slot: dict, recompile: bool = False,
+             flush: bool = True) -> "Matrix":
         tr = self.session.tracer
         if not tr.enabled:
-            return self._run_inner(by_slot, recompile, None)
+            return self._run_inner(by_slot, recompile, None, flush)
         with tr.span("plan.run", track="plan", key=self.key[:10],
                      bound=len(by_slot)) as sp:
-            return self._run_inner(by_slot, recompile, sp)
+            return self._run_inner(by_slot, recompile, sp, flush)
 
     def _run_inner(self, by_slot: dict, recompile: bool,
-                   sp) -> "Matrix":
+                   sp, flush: bool = True) -> "Matrix":
         tr = self.session.tracer
         try:
             with tr.span("plan.rebind", track="plan", slots=len(by_slot)):
@@ -202,25 +222,26 @@ class Plan:
             # inputs are untouched and this plan stays runnable
             if not recompile:
                 raise
-            return self._recompile_run(by_slot)
+            return self._recompile_run(by_slot, flush=flush)
         first = self.nodes is None
         t0 = time.perf_counter()
         if first:
             with tr.span("plan.compile", track="plan") as csp:
-                self._execute_first()
+                self._execute_first(flush=flush)
                 csp.set(tasks=len(self.nodes))
             self.compile_s = time.perf_counter() - t0
         else:
             with tr.span("plan.replay", track="plan",
                          tasks=len(self.nodes)):
-                self._replay()
+                self._replay(flush=flush)
             self.replay_s.append(time.perf_counter() - t0)
         if sp is not None:
             sp.set(first=first, tasks=len(self.nodes))
         self.n_runs += 1
         return self._handle()
 
-    def _recompile_run(self, by_slot: dict) -> "Matrix":
+    def _recompile_run(self, by_slot: dict, flush: bool = True
+                       ) -> "Matrix":
         """Compile the same expression against fresh inputs and run it.
 
         Each bound slot whose value no longer fits the compiled structure
@@ -236,9 +257,9 @@ class Plan:
         # into it is a zero-task replay, so try those before building
         # fresh inputs (keeps iterating with recompile=True from growing
         # a new plan per call)
-        for succ in self._recompiled.values():
+        for succ in list(self._recompiled.values()):
             try:
-                return succ._run(by_slot)
+                return succ._run(by_slot, flush=flush)
             except PlanStructureError:
                 continue
         subst: dict = {}
@@ -279,7 +300,7 @@ class Plan:
             e = Transpose(e)    # restore the transpose peeled at compile
         plan, _ = sess._compile_expr(e, self.params)
         self._recompiled.setdefault(plan.key, plan)
-        return plan._run({})
+        return plan._run({}, flush=flush)
 
     def _rebind(self, by_slot: dict) -> None:
         g = self.session.graph
@@ -313,21 +334,24 @@ class Plan:
                     sched.store.invalidate_content(
                         sched.placement.get(nid))
 
-    def _execute_first(self) -> None:
+    def _execute_first(self, flush: bool = True) -> None:
         sess, g = self.session, self.session.graph
-        # drain earlier pending waves so the wave-log slice profile()
-        # reads contains only this plan's work
-        g.flush()
+        if flush:
+            # drain earlier pending waves so the wave-log slice profile()
+            # reads contains only this plan's work (a deferred-batch
+            # caller forgoes that isolation to keep other plans' waves
+            # coalescible)
+            g.flush()
         self._wave0 = len(getattr(g.engine, "_waves", ()))
         n0 = len(g.nodes)
         self.out_node = lower(sess, self.expr, self.params, self.reports,
                               use_transpose_cache=False)
         self.nodes = range(n0, len(g.nodes))
 
-    def _replay(self) -> None:
+    def _replay(self, flush: bool = True) -> None:
         g = self.session.graph
         qt_invalidate_caches(g, self.nodes)
-        qt_replay(g, self.nodes)
+        qt_replay(g, self.nodes, flush=flush)
         sched = self.session._sched
         if sched is not None and sched.store is not None:
             # program chunks already placed by an earlier simulate now

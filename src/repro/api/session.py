@@ -51,8 +51,12 @@ from repro.obs.tracer import Tracer, as_tracer
 from repro.runtime.scheduler import PLACEMENTS
 
 from .expr import (Expr, Transpose, expr_upper, fingerprint, rewrite)
+from .lru import LRUCache
 from .matrix import Matrix
 from .plan import Plan, lower
+
+#: default bound on a session's compiled-plan cache (LRU; 0 = unbounded)
+PLAN_CACHE_CAP = 64
 
 #: accepted spellings of the scheduler placement policies: every canonical
 #: policy name passes through, plus shorthand aliases
@@ -130,6 +134,9 @@ class Session:
         (shared across sessions).  See also :meth:`tracing` for scoped
         tracing and :meth:`metrics` for the unified counter view
         (DESIGN.md §8).
+    plan_cache_cap : bound on the compiled-plan cache (LRU eviction past
+        it; ``0`` = unbounded).  Hit/miss/eviction counters appear in
+        :meth:`metrics` once the cache has been touched.
     """
 
     def __init__(self, engine: Any = "numpy",
@@ -138,7 +145,8 @@ class Session:
                  cost: Optional[CostModel] = None,
                  cache_bytes: int = 1 << 62, seed: int = 0,
                  dedup: bool = False, tau: float = 0.0,
-                 lazy: bool = False, trace: Any = False):
+                 lazy: bool = False, trace: Any = False,
+                 plan_cache_cap: int = PLAN_CACHE_CAP):
         self.graph = CTGraph(engine=_validate_engine(engine))
         self.tracer = as_tracer(trace)
         self.graph.tracer = self.tracer
@@ -156,8 +164,14 @@ class Session:
         # node id -> materialised-transpose node id, shared by all handles
         # so a reused lazy .T registers its task program only once
         self._transpose_cache: dict[Optional[int], Optional[int]] = {}
-        # compiled-plan cache: structural fingerprint -> Plan (DESIGN.md §6)
-        self._plans: dict[str, Plan] = {}
+        # compiled-plan cache: structural fingerprint -> Plan (DESIGN.md
+        # §6).  LRU-bounded: under serving traffic unbounded growth is a
+        # leak; hits/misses/evictions surface through metrics()
+        self._plans: LRUCache = LRUCache(cap=plan_cache_cap)
+        # serving hook: callables fired with each freshly compiled Plan
+        # (the cross-session SharedPlanCache registers through this, so
+        # recompile=True successors land there too — DESIGN.md §9)
+        self._plan_observers: list = []
         # node id -> quadtree structure fingerprint (structure is final at
         # registration, so entries never go stale)
         self._structfp: dict[Optional[int], str] = {}
@@ -279,19 +293,34 @@ class Session:
         plan, _ = self._compile_expr(e, params)
         return plan
 
-    def _compile_expr(self, e: Expr, params: QTParams
-                      ) -> tuple[Plan, list]:
+    def _fingerprint_expr(self, e: Expr, params: QTParams
+                          ) -> tuple[str, str, list, bool, bool, Expr]:
+        """Normalise + fingerprint an expression for plan-cache lookup.
+
+        Returns ``(key, struct_key, slot_nids, t, upper, normal_form)``
+        where ``struct_key`` covers the expression shape, tau, QTParams
+        and operand *structures* (input-identity-free — the cross-session
+        serving cache groups by it) and ``key`` appends the identity of
+        the bound inputs (this session's full plan-cache key).
+        """
         upper = expr_upper(e)
         e = rewrite(e)
         t = False
         while isinstance(e, Transpose):
             t, e = not t, e.a
         key, slot_nids = fingerprint(e, self._structure_fp, params)
+        struct_key = f"{key}:t{int(t)}"
         # input identity is part of the cache key: a structurally
         # identical expression over *different* matrices compiles its own
         # program instead of silently rebinding (and overwriting) the
         # first plan's input chunks
-        key = f"{key}:t{int(t)}:b{tuple(slot_nids)}"
+        key = f"{struct_key}:b{tuple(slot_nids)}"
+        return key, struct_key, slot_nids, t, upper, e
+
+    def _compile_expr(self, e: Expr, params: QTParams
+                      ) -> tuple[Plan, list]:
+        key, struct_key, slot_nids, t, upper, expr = \
+            self._fingerprint_expr(e, params)
         plan = self._plans.get(key)
         if plan is None:
             names: list = []
@@ -300,10 +329,13 @@ class Session:
                 while name in names:    # keep every slot name bindable
                     name += "_"
                 names.append(name)
-            plan = Plan(self, e, params, key, slot_nids, names)
+            plan = Plan(self, expr, params, key, slot_nids, names,
+                        struct_key=struct_key)
             plan.out_t = t
             plan.out_upper = upper
-            self._plans[key] = plan
+            self._plans.put(key, plan)
+            for observer in list(self._plan_observers):
+                observer(plan)
         return plan, slot_nids
 
     def _force(self, m: Matrix) -> None:
@@ -504,7 +536,31 @@ class Session:
         out = [from_engine_stats(self.engine_stats())]
         if self._last_report is not None:
             out.append(from_sim_report(self._last_report))
+        pc = self._plan_cache_metrics()
+        if pc is not None:
+            out.append(pc)
         return out
+
+    def _plan_cache_metrics(self) -> Optional[MetricSet]:
+        """Plan-cache counters, or None while the cache is untouched.
+
+        Aggregates the session cache with every cached plan's bounded
+        ``_recompiled`` successor cache (the other LRU this session
+        owns).  Eager sessions never touch either, so their metrics()
+        sources are unchanged.
+        """
+        c = self._plans.counters()
+        for plan in self._plans.values():
+            rc = plan._recompiled.counters()
+            for k in ("hits", "misses", "evictions"):
+                c[k] += rc[k]
+            c["size"] += rc["size"]
+        if c["hits"] + c["misses"] + c["evictions"] == 0:
+            return None
+        ms = MetricSet(source="plan-cache")
+        for k in ("hits", "misses", "evictions", "size"):
+            ms.add(f"plan_cache_{k}", "count", [c[k]])
+        return ms
 
 
 def _first_input_n(e: Expr) -> int:

@@ -52,6 +52,9 @@ from .leaf import (LeafMatrix, LeafStats, alloc_structure, leaf_add,
 from .quadtree import MatrixChunk
 from repro.obs.tracer import NOOP
 
+#: leaf-payload kinds executed host-side (no kernel wave)
+HOST_KINDS = ("add", "transpose", "scale")
+
 
 @dataclasses.dataclass(frozen=True)
 class LeafPayload:
@@ -120,6 +123,18 @@ class LeafEngine:
         overrides this to release device-resident block buffers and
         ownership/residency bookkeeping for the freed leaves.
         """
+
+    def has_pending_for(self, leaf_ids) -> bool:
+        """Whether any deferred task reads or writes one of these leaves.
+
+        ``leaf_ids`` is a set of ``id(LeafMatrix)`` values.  Immediate
+        backends keep nothing deferred; the batched backends override
+        this so callers that overwrite leaf values in place (the plan
+        rebind hooks) can flush *only when their target is actually
+        entangled with pending work* — leaving unrelated deferred waves
+        intact for cross-plan coalescing (DESIGN.md §9).
+        """
+        return False
 
     def stats(self) -> dict:
         return {}
@@ -573,32 +588,87 @@ class PallasEngine(LeafEngine):
             return False
         return t.b_leaf is None or id(t.b_leaf) not in self._unfilled
 
+    def batch_key(self, t: _Pending) -> tuple:
+        """Wave-compatibility key of a deferred kernel task.
+
+        Tasks agreeing on ``(kernel, leaf_n, bs, dtype)`` may share one
+        fused dispatch — within this engine's waves and, through the
+        serving layer's cross-plan coalescer (:mod:`repro.serve`),
+        across engines of different sessions.
+        """
+        return (self.kernel, t.out.n, t.out.bs,
+                np.dtype(t.out.dtype).name)
+
+    def has_pending_for(self, leaf_ids) -> bool:
+        for t in self._pending:
+            if id(t.out) in leaf_ids or id(t.a_leaf) in leaf_ids or \
+                    (t.b_leaf is not None and id(t.b_leaf) in leaf_ids):
+                return True
+        return False
+
+    def ready_wave(self) -> dict:
+        """Ready deferred kernel tasks, grouped by :meth:`batch_key`.
+
+        Read-only: nothing is executed or committed.  The cross-plan
+        coalescer merges groups with equal keys across engines before
+        dispatching; :meth:`flush` consumes the same grouping locally.
+        """
+        groups: dict[tuple, list[_Pending]] = {}
+        for t in self._pending:
+            if t.payload.kind not in HOST_KINDS and self._ready(t):
+                groups.setdefault(self.batch_key(t), []).append(t)
+        return groups
+
+    def run_host_ready(self) -> bool:
+        """Execute every ready host-side fill (add/transpose/scale).
+
+        Returns True if anything ran — the progress signal both
+        :meth:`flush` and the coalescer's drain loop use.
+        """
+        progressed = False
+        rest = []
+        for t in self._pending:
+            if t.payload.kind in HOST_KINDS and self._ready(t):
+                if t.payload.kind == "add":
+                    self._run_add(t)
+                elif t.payload.kind == "scale":
+                    self._run_scale(t)
+                else:
+                    self._run_transpose(t)
+                self._unfilled.discard(id(t.out))
+                progressed = True
+            else:
+                rest.append(t)
+        self._pending = rest
+        return progressed
+
+    def commit_tasks(self, tasks: list, wave_record: Optional[dict] = None
+                     ) -> None:
+        """Retire externally executed tasks (cross-engine coalescer).
+
+        The coalescer packs this engine's share of a merged wave into one
+        dispatch it runs itself, then commits the share here so the next
+        flush does not re-run it.  ``wave_record`` (this engine's slice
+        of the merged wave's accounting) lands in the wave log.
+        """
+        done = {id(t) for t in tasks}
+        for t in tasks:
+            self._unfilled.discard(id(t.out))
+        self._pending = [t for t in self._pending if id(t) not in done]
+        if wave_record is not None:
+            self._waves.append(wave_record)
+
     def flush(self, g=None) -> None:
         # tasks leave self._pending only after their wave succeeded, so a
         # kernel failure leaves the deferred work intact and a later flush
         # retries it (block fills are idempotent in-place assignments)
         self._bind(g)
-        host_kinds = ("add", "transpose", "scale")
         while self._pending:
-            wave = [t for t in self._pending
-                    if t.payload.kind not in host_kinds and self._ready(t)]
-            if wave:
-                self._run_wave(wave)   # commits per group (see below)
-            progressed = bool(wave)
-            rest = []
-            for t in self._pending:
-                if t.payload.kind in host_kinds and self._ready(t):
-                    if t.payload.kind == "add":
-                        self._run_add(t)
-                    elif t.payload.kind == "scale":
-                        self._run_scale(t)
-                    else:
-                        self._run_transpose(t)
-                    self._unfilled.discard(id(t.out))
-                    progressed = True
-                else:
-                    rest.append(t)
-            self._pending = rest
+            groups = self.ready_wave()
+            if groups:
+                self._run_wave(groups)   # commits per group (see below)
+            progressed = bool(groups)
+            progressed |= self.run_host_ready()
             if self._pending and not progressed:
                 raise RuntimeError(
                     "leaf engine deadlock: unresolvable leaf dependencies")
@@ -664,111 +734,26 @@ class PallasEngine(LeafEngine):
                                   "padded_pairs", "c_blocks", "bytes_packed")
                 if k in w}
 
-    def _run_wave(self, wave: list[_Pending]) -> None:
-        groups: dict[int, list[_Pending]] = {}
-        for t in wave:
-            groups.setdefault(t.out.bs, []).append(t)
+    def _run_wave(self, groups: dict[tuple, list[_Pending]]) -> None:
         tr = self.tracer
-        for bs, tasks in sorted(groups.items()):
+        for key, tasks in sorted(groups.items()):
             if tr.enabled:
                 with tr.span("engine.wave", track="engine") as sp:
-                    self._run_group(bs, tasks)
+                    self._run_group(key[2], tasks)
                     sp.set(**self._wave_span_attrs())
             else:
-                self._run_group(bs, tasks)
+                self._run_group(key[2], tasks)
+            self._waves[-1].setdefault("batch_key", list(key))
             # commit this group immediately: a failure in a *later* group
             # must not leave these tasks pending, or a retrying flush would
             # re-run them and double-count their wave record in stats()
-            done = {id(t) for t in tasks}
-            for t in tasks:
-                self._unfilled.discard(id(t.out))
-            self._pending = [t for t in self._pending if id(t) not in done]
+            self.commit_tasks(tasks)
 
     def _run_group(self, bs: int, tasks: list[_Pending]) -> None:
         """Pack every block pair of every leaf task into one kernel call."""
-        import jax.numpy as jnp
-        from repro.kernels import ops as kops
-
-        # global output slot numbering: task-by-task, structure order
-        slot_base: list[int] = []
-        n_slots = 0
-        for t in tasks:
-            slot_base.append(n_slots)
-            n_slots += len(t.out.blocks)
-
-        # operands are packed *uniquely* — one slot per distinct
-        # (leaf, key, transpose) block — and pairs address them through
-        # sa/sb indices, which is exactly the slot-indexed gather the
-        # bsmm_pairs scalar-prefetch kernel is built around
-        n_pairs = sum(len(t.pairs) for t in tasks)
-        a_slots: dict[tuple, int] = {}
-        b_slots: dict[tuple, int] = {}
-        a_list: list[np.ndarray] = []
-        b_list: list[np.ndarray] = []
-
-        def slot_of(slots, lst, leaf, key, tr):
-            sk = (id(leaf), key, tr)
-            s = slots.get(sk)
-            if s is None:
-                s = len(lst)
-                slots[sk] = s
-                blk = leaf.blocks[key]
-                lst.append(blk.T if tr else blk)
-            return s
-
-        sa = np.empty((n_pairs,), np.int32)
-        sb = np.empty((n_pairs,), np.int32)
-        seg = np.empty((n_pairs,), np.int32)
-        p = 0
-        for base, t in zip(slot_base, tasks):
-            key_slot = {key: base + i for i, key in enumerate(t.out.blocks)}
-            srcs = {"a": t.a_leaf, "b": t.b_leaf}
-            for src_a, ka, tra, src_b, kb, trb, out_key in t.pairs:
-                sa[p] = slot_of(a_slots, a_list, srcs[src_a], ka, tra)
-                sb[p] = slot_of(b_slots, b_list, srcs[src_b], kb, trb)
-                seg[p] = key_slot[out_key]
-                p += 1
-        a_pack = np.stack(a_list).astype(np.float32)
-        b_pack = np.stack(b_list).astype(np.float32)
-
-        # ascending segment ids (bsmm_pairs accumulation contract)
-        order = np.argsort(seg, kind="stable")
-        sa, sb, seg = sa[order], sb[order], seg[order]
-
-        t0 = time.perf_counter()
-        with self.tracer.span("kernel.dispatch", track="engine",
-                              kernel=self.kernel, bs=bs,
-                              pairs=int(n_pairs), c_blocks=int(n_slots)):
-            if self.kernel == "pairs":
-                c = kops.bsmm_pairs(
-                    jnp.asarray(a_pack), jnp.asarray(b_pack),
-                    jnp.asarray(sa), jnp.asarray(sb),
-                    jnp.asarray(seg), cap_c=n_slots, use_pallas=True,
-                    interpret=self.interpret)
-                c = np.asarray(c)
-                padded = n_pairs
-            else:
-                # host gather feeds the cuBLAS-shaped batch; batched_gemm
-                # zero-pads to a block_t multiple internally
-                prods = np.asarray(kops.batched_gemm(
-                    jnp.asarray(a_pack[sa]), jnp.asarray(b_pack[sb]),
-                    block_t=self.block_t, use_pallas=True,
-                    interpret=self.interpret))
-                c = np.zeros((n_slots, bs, bs), np.float32)
-                np.add.at(c, seg, prods)
-                padded = n_pairs + (-n_pairs) % self.block_t
-        wall = time.perf_counter() - t0
-
-        self._waves.append({
-            "kernel": self.kernel, "bs": bs, "tasks": len(tasks),
-            "pairs": int(n_pairs), "padded_pairs": int(padded),
-            "unique_blocks": len(a_list) + len(b_list),
-            "c_blocks": int(n_slots), "wall_s": wall,
-            "bytes_packed": int(a_pack.nbytes + b_pack.nbytes + c.nbytes),
-        })
-        for base, t in zip(slot_base, tasks):
-            unpack_blocks(t.out, list(t.out.blocks),
-                          c[base:base + len(t.out.blocks)])
+        self._waves.append(dispatch_packed_wave(
+            tasks, bs, kernel=self.kernel, block_t=self.block_t,
+            interpret=self.interpret, tracer=self.tracer))
 
     # -- reporting -----------------------------------------------------------
     def stats(self) -> dict:
@@ -783,3 +768,104 @@ class PallasEngine(LeafEngine):
             "bytes_packed": sum(w["bytes_packed"] for w in self._waves),
             "wave_log": list(self._waves),
         }
+
+
+def dispatch_packed_wave(tasks: list[_Pending], bs: int, *, kernel: str,
+                         block_t: int, interpret: bool,
+                         tracer=NOOP) -> dict:
+    """Pack every block pair of every leaf task into one kernel call.
+
+    Module-level so the cross-plan coalescer (:mod:`repro.serve.coalesce`)
+    can merge same-``batch_key`` tasks *from several engines* into one
+    dispatch.  Fills each task's output leaf in place and returns the wave
+    record (the caller appends it to the owning engine's wave log).
+
+    Numerical identity with per-engine dispatch: output slots are numbered
+    task-by-task in structure order and pairs are sorted by a *stable*
+    argsort on segment id, so every output block accumulates its products
+    in the same order regardless of which other tasks share the wave.
+    """
+    import jax.numpy as jnp
+    from repro.kernels import ops as kops
+
+    # global output slot numbering: task-by-task, structure order
+    slot_base: list[int] = []
+    n_slots = 0
+    for t in tasks:
+        slot_base.append(n_slots)
+        n_slots += len(t.out.blocks)
+
+    # operands are packed *uniquely* — one slot per distinct
+    # (leaf, key, transpose) block — and pairs address them through
+    # sa/sb indices, which is exactly the slot-indexed gather the
+    # bsmm_pairs scalar-prefetch kernel is built around
+    n_pairs = sum(len(t.pairs) for t in tasks)
+    a_slots: dict[tuple, int] = {}
+    b_slots: dict[tuple, int] = {}
+    a_list: list[np.ndarray] = []
+    b_list: list[np.ndarray] = []
+
+    def slot_of(slots, lst, leaf, key, tr):
+        sk = (id(leaf), key, tr)
+        s = slots.get(sk)
+        if s is None:
+            s = len(lst)
+            slots[sk] = s
+            blk = leaf.blocks[key]
+            lst.append(blk.T if tr else blk)
+        return s
+
+    sa = np.empty((n_pairs,), np.int32)
+    sb = np.empty((n_pairs,), np.int32)
+    seg = np.empty((n_pairs,), np.int32)
+    p = 0
+    for base, t in zip(slot_base, tasks):
+        key_slot = {key: base + i for i, key in enumerate(t.out.blocks)}
+        srcs = {"a": t.a_leaf, "b": t.b_leaf}
+        for src_a, ka, tra, src_b, kb, trb, out_key in t.pairs:
+            sa[p] = slot_of(a_slots, a_list, srcs[src_a], ka, tra)
+            sb[p] = slot_of(b_slots, b_list, srcs[src_b], kb, trb)
+            seg[p] = key_slot[out_key]
+            p += 1
+    a_pack = np.stack(a_list).astype(np.float32)
+    b_pack = np.stack(b_list).astype(np.float32)
+
+    # ascending segment ids (bsmm_pairs accumulation contract)
+    order = np.argsort(seg, kind="stable")
+    sa, sb, seg = sa[order], sb[order], seg[order]
+
+    t0 = time.perf_counter()
+    with tracer.span("kernel.dispatch", track="engine",
+                     kernel=kernel, bs=bs,
+                     pairs=int(n_pairs), c_blocks=int(n_slots)):
+        if kernel == "pairs":
+            c = kops.bsmm_pairs(
+                jnp.asarray(a_pack), jnp.asarray(b_pack),
+                jnp.asarray(sa), jnp.asarray(sb),
+                jnp.asarray(seg), cap_c=n_slots, use_pallas=True,
+                interpret=interpret)
+            c = np.asarray(c)
+            padded = n_pairs
+        else:
+            # host gather feeds the cuBLAS-shaped batch; batched_gemm
+            # zero-pads to a block_t multiple internally
+            prods = np.asarray(kops.batched_gemm(
+                jnp.asarray(a_pack[sa]), jnp.asarray(b_pack[sb]),
+                block_t=block_t, use_pallas=True,
+                interpret=interpret))
+            c = np.zeros((n_slots, bs, bs), np.float32)
+            np.add.at(c, seg, prods)
+            padded = n_pairs + (-n_pairs) % block_t
+    wall = time.perf_counter() - t0
+
+    record = {
+        "kernel": kernel, "bs": bs, "tasks": len(tasks),
+        "pairs": int(n_pairs), "padded_pairs": int(padded),
+        "unique_blocks": len(a_list) + len(b_list),
+        "c_blocks": int(n_slots), "wall_s": wall,
+        "bytes_packed": int(a_pack.nbytes + b_pack.nbytes + c.nbytes),
+    }
+    for base, t in zip(slot_base, tasks):
+        unpack_blocks(t.out, list(t.out.blocks),
+                      c[base:base + len(t.out.blocks)])
+    return record

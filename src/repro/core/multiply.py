@@ -299,7 +299,7 @@ def qt_scale(g: CTGraph, params: QTParams, a: Optional[int], alpha: float
     return nid
 
 
-def qt_replay(g: CTGraph, nids) -> None:
+def qt_replay(g: CTGraph, nids, *, flush: bool = True) -> None:
     """Re-execute the numeric work of an already-registered task program.
 
     ``nids`` is the (ascending) node-id range a compiled Plan registered.
@@ -311,12 +311,17 @@ def qt_replay(g: CTGraph, nids) -> None:
     deferred backends' batched waves.  Structural nodes (creates,
     recursion containers, aliases) hold only identifiers and need no
     recomputation.
+
+    ``flush=False`` leaves the re-dispatched work deferred so a serving
+    front end can coalesce the ready waves of several plans into shared
+    batched dispatches before flushing once (DESIGN.md §9).
     """
     for nid in nids:
         node = g.nodes[nid]
         if node.payload is not None and node.value is not None:
             g.engine.reexecute(g, node, node.payload)
-    g.flush()
+    if flush:
+        g.flush()
 
 
 def qt_sym_square(g: CTGraph, params: QTParams, a: Optional[int]

@@ -389,6 +389,38 @@ class PlanStructureError(ValueError):
     """
 
 
+def _subtree_leaf_ids(g: CTGraph, nid: Optional[int]) -> set:
+    """``id(LeafMatrix)`` of every leaf under ``nid`` (NIL-aware)."""
+    ids: set = set()
+
+    def walk(n: Optional[int]) -> None:
+        chunk: Optional[MatrixChunk] = g.value_of(n)
+        if chunk is None:
+            return
+        if chunk.is_leaf:
+            ids.add(id(chunk.leaf))
+        else:
+            for c in chunk.children:
+                walk(c)
+
+    walk(nid)
+    return ids
+
+
+def _flush_if_entangled(g: CTGraph, leaf_ids: set) -> None:
+    """Flush only when deferred work touches one of these leaves.
+
+    Rebind overwrites leaf payloads in place, so any pending task reading
+    or writing them must run first.  But an *unconditional* flush here
+    would drain every other in-flight plan's deferred waves as a side
+    effect, defeating the serving layer's cross-plan wave coalescing
+    (DESIGN.md §9) — so unrelated pending work is left untouched.
+    """
+    eng = g._engine
+    if eng is not None and eng.has_pending_for(leaf_ids):
+        g.flush()
+
+
 def qt_rebind_dense(g: CTGraph, nid: Optional[int], a: np.ndarray,
                     params: QTParams) -> None:
     """Refill a built quadtree's leaf values from a dense array, in place.
@@ -403,7 +435,8 @@ def qt_rebind_dense(g: CTGraph, nid: Optional[int], a: np.ndarray,
     """
     a = np.asarray(a)
     assert a.shape == (params.n, params.n)
-    g.flush()   # placeholder leaves must be final before we overwrite them
+    # placeholder leaves must be final before we overwrite them
+    _flush_if_entangled(g, _subtree_leaf_ids(g, nid))
 
     def check(nid: Optional[int], sub: np.ndarray) -> None:
         chunk: Optional[MatrixChunk] = g.value_of(nid)
@@ -474,7 +507,9 @@ def qt_rebind_from(g: CTGraph, dst: Optional[int], src: Optional[int]
     pattern, leaf keys) — before any destination block is written, so the
     compiled input survives a failed rebind untouched.
     """
-    g.flush()
+    # src leaves are read, dst leaves overwritten: both must be settled
+    _flush_if_entangled(g, _subtree_leaf_ids(g, dst)
+                        | _subtree_leaf_ids(g, src))
 
     def check(d: Optional[int], s: Optional[int]) -> None:
         dc: Optional[MatrixChunk] = g.value_of(d)

@@ -1,6 +1,6 @@
-"""Serving driver: batched prefill + decode loop with KV/SSM caches.
+"""LM-decode serving driver: batched prefill + decode loop with KV/SSM caches.
 
-    PYTHONPATH=src python -m repro.launch.serve --arch olmo-1b --smoke \
+    PYTHONPATH=src python -m repro.launch.lm_serve --arch olmo-1b --smoke \
         --batch 4 --prompt-len 32 --gen 16
 
 Implements the production decode loop shape-for-shape: requests are

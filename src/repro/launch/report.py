@@ -104,6 +104,25 @@ def mesh_comm_table(doc) -> str:
     return "\n".join(out)
 
 
+def serve_table(doc) -> str:
+    """BENCH_serve.json artifact -> serving throughput/latency table."""
+    out = ["| max_inflight | req/s | p50 ms | p95 ms | p99 ms | hit rate "
+           "| merged waves | solo waves |",
+           "|---|---|---|---|---|---|---|---|"]
+    for r in doc["rows"]:
+        out.append(
+            f"| {r['max_inflight']} | {r['requests_per_s']:.1f} | "
+            f"{r['p50_ms']:.1f} | {r['p95_ms']:.1f} | {r['p99_ms']:.1f} | "
+            f"{r['hit_rate']*100:.0f}% | {r['merged_waves']} | "
+            f"{r['solo_waves']} |")
+    p = doc.get("params", {})
+    out.append("")
+    out.append(f"{doc['rows'][0]['requests']} requests, "
+               f"n={p.get('n')}, {p.get('n_sessions')} sessions; "
+               f"results pinned to serial per-plan execution")
+    return "\n".join(out)
+
+
 def main() -> None:
     target = pathlib.Path(sys.argv[1] if len(sys.argv) > 1
                           else "experiments/dryrun")
@@ -112,6 +131,9 @@ def main() -> None:
         if doc.get("bench") == "mesh_comm":
             print(f"## Measured mesh communication ({target.name})\n")
             print(mesh_comm_table(doc))
+        elif doc.get("bench") == "serve":
+            print(f"## Plan serving ({target.name})\n")
+            print(serve_table(doc))
         elif "counters" in doc:
             print(f"## Metrics ({target.name})\n")
             print(metrics_table([doc]))

@@ -176,7 +176,7 @@ def input_specs(cfg: ModelConfig, shape: ShapeSpec, *,
 
     train:   {tokens, targets} (or frames/patches for stub frontends)
     prefill: {tokens}
-    decode:  {token, cache..., pos}  — built by launch/serve.py helpers;
+    decode:  {token, cache..., pos}  — built by launch/lm_serve.py helpers;
              here we return the new-token batch only.
     """
     b, s = shape.global_batch, shape.seq_len
