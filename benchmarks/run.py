@@ -40,6 +40,8 @@ BENCHES = [
      "tracing overhead guard: <3% traced, ~0% no-op"),
     ("bench_serve", ["--out", "BENCH_serve.json"],
      "plan serving: req/s vs coalesced batch size, p50/p95/p99, hit rate"),
+    ("bench_fault", ["--out", "BENCH_fault.json"],
+     "fault recovery: failure rate x policy, lineage beats full re-run"),
 ]
 
 QUICK = [
@@ -56,6 +58,8 @@ QUICK = [
      "quick tracing overhead guard (<3% traced, ~0% no-op)"),
     ("bench_serve", ["--quick", "--out", "BENCH_serve.json"],
      "quick serving sweep (hit rate, coalesced throughput, tail latency)"),
+    ("bench_fault", ["--quick", "--out", "BENCH_fault.json"],
+     "quick fault-recovery sweep (degradation + recompute-subset guards)"),
 ]
 
 

@@ -63,9 +63,17 @@ class LRUCache:
         return self._d.pop(key, default)
 
     def setdefault(self, key, value):
-        """Insert only if absent; returns the stored value (no counting)."""
+        """Insert only if absent; returns the stored value (no counting).
+
+        An existing key is refreshed to the most-recent position: the
+        caller just used it, and leaving it at its original slot would
+        let a hot entry (e.g. a Plan's recompiled successor re-fetched
+        every run) be evicted at cap despite being the most-used one.
+        """
         if key in self._d:
-            return self._d[key]
+            v = self._d.pop(key)
+            self._d[key] = v        # recency refresh, no hit/miss counting
+            return v
         self.put(key, value)
         return value
 

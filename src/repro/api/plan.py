@@ -376,7 +376,8 @@ class Plan:
 
     # -- simulation ----------------------------------------------------------
     def simulate(self, p: Optional[int] = None,
-                 placement: Optional[str] = None, fresh_stats: bool = True):
+                 placement: Optional[str] = None, fresh_stats: bool = True,
+                 faults=None):
         """Simulate the plan's program on the session's virtual cluster.
 
         Both passes are restricted to the plan's own task program (plus
@@ -390,6 +391,11 @@ class Plan:
         tasks run again, so each iteration of a purification loop gets
         its own communication/makespan report against persistent input
         placements.
+
+        ``faults`` injects a deterministic fault schedule into this
+        pass's simulated timeline (DESIGN.md §10) — the simulator never
+        touches task values, so a failure-injected replay returns
+        bitwise-identical results to the failure-free one.
         """
         sess, g = self.session, self.session.graph
         sched = sess.scheduler
@@ -398,14 +404,15 @@ class Plan:
         if fresh_stats:
             sched.reset_stats()
         if sched.has_simulated(self.nodes):
-            return sched.replay(g, self.nodes)
+            return sched.replay(g, self.nodes, faults=faults)
         from .session import _normalize_placement
         placement = _normalize_placement(placement)
         if sched.store is None:     # first-ever run: session defaults
             p = p or sess.p
             placement = placement or sess.placement
         return sched.run(g, n_workers=p, placement=placement,
-                         only=sched.unsimulated_closure(g, self.nodes))
+                         only=sched.unsimulated_closure(g, self.nodes),
+                         faults=faults)
 
     # -- reporting -----------------------------------------------------------
     def profile(self) -> dict:

@@ -376,7 +376,7 @@ class Session:
 
     def simulate(self, p: Optional[int] = None,
                  placement: Optional[str] = None,
-                 fresh_stats: bool = False):
+                 fresh_stats: bool = False, faults: Any = None):
         """Replay all not-yet-simulated tasks on the virtual cluster.
 
         The scheduler is persistent across calls (chunk placements from an
@@ -388,6 +388,15 @@ class Session:
         are pinned by the first call.  To re-simulate a compiled plan's
         fixed program use :meth:`Plan.simulate`, which replays through
         :meth:`~repro.runtime.scheduler.Scheduler.replay`.
+
+        ``faults`` injects a deterministic
+        :class:`~repro.runtime.recovery.FaultSchedule` (or an iterable of
+        :class:`~repro.runtime.recovery.FaultEvent`) into this run's
+        simulated timeline — worker deaths, stragglers, elastic
+        join/leave — with lineage or replication recovery (DESIGN.md
+        §10).  The returned report carries the recovery counters
+        (``tasks_recomputed``, ``chunks_lost``, ``bytes_rereplicated``).
+        Dead workers stay out of the pool for later calls.
         """
         sched = self.scheduler
         if fresh_stats:
@@ -401,12 +410,13 @@ class Session:
                                   p=p, placement=placement,
                                   fresh_stats=fresh_stats) as sp:
                 rep = sched.run(self.graph, n_workers=p,
-                                placement=placement)
+                                placement=placement, faults=faults)
                 sp.set(makespan_s=rep.makespan,
                        tasks=sum(rep.tasks_per_worker),
                        bytes_received=sum(rep.bytes_received))
         else:
-            rep = sched.run(self.graph, n_workers=p, placement=placement)
+            rep = sched.run(self.graph, n_workers=p, placement=placement,
+                            faults=faults)
         self._last_report = rep
         return rep
 

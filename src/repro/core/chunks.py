@@ -319,6 +319,73 @@ class ChunkStore:
                 del self._cache[w][key]
                 self._cache_used[w] -= size
 
+    # -- fault tolerance (runtime/recovery.py; DESIGN.md §10) ---------------
+    def drop_worker(self, worker: int) -> tuple[int, int]:
+        """Model worker death: its owned chunks and cache vanish.
+
+        Every other worker's cached copies of the dead worker's chunks
+        are dropped too — the ``(owner, local)`` slots may be reused by a
+        later registration once recovery re-places the data.  Per-worker
+        statistics are kept (the report still shows what the worker did
+        before dying).  Returns ``(n_chunks, n_bytes)`` lost.
+        """
+        lost_keys = [(worker, local) for local in self._data[worker]]
+        n_chunks = len(lost_keys)
+        n_bytes = sum(self._sizes[worker].values())
+        self._data[worker].clear()
+        self._sizes[worker].clear()
+        self.stats[worker].owned_bytes = 0
+        self._cache[worker].clear()
+        self._cache_used[worker] = 0
+        for key in lost_keys:
+            self._norm2.pop(key, None)
+            self._refs.pop(key, None)
+            fp = self._fp_of.pop(key, None)
+            if fp is not None and self._by_fp.get(fp) == key:
+                del self._by_fp[fp]
+        for w in range(self.n_workers):
+            if w == worker:
+                continue
+            cache = self._cache[w]
+            for key in [k for k in cache if k[0] == worker]:
+                self._cache_used[w] -= cache.pop(key)
+        return n_chunks, n_bytes
+
+    def add_worker(self) -> int:
+        """Grow the store by one worker (elastic join); returns its rank."""
+        w = self.n_workers
+        self.n_workers += 1
+        self._data.append({})
+        self._sizes.append({})
+        self._next.append(0)
+        self._cache.append(OrderedDict())
+        self._cache_used.append(0)
+        self.stats.append(WorkerStats())
+        return w
+
+    def replicate(self, cid: ChunkId, dst: int) -> ChunkId:
+        """Copy a live chunk onto ``dst`` (r-way replication, DESIGN.md §10).
+
+        Bypasses dedup on purpose: the point is a second *physical* copy
+        that survives the primary owner's death, so the replica must not
+        resolve to the primary's fingerprint.  The transfer is accounted
+        on ``dst`` exactly like a placement push.
+        """
+        obj = self._data[cid.owner][cid.local]
+        nbytes = self._sizes[cid.owner][cid.local]
+        local = self._next[dst]
+        self._next[dst] += 1
+        self._data[dst][local] = obj
+        self._sizes[dst][local] = nbytes
+        st = self.stats[dst]
+        st.owned_bytes += nbytes
+        st.peak_owned_bytes = max(st.peak_owned_bytes, st.owned_bytes)
+        if dst != cid.owner:
+            st.bytes_received += nbytes
+            st.bytes_pushed += nbytes
+            st.messages_received += 1
+        return ChunkId(dst, local)
+
     # -- aggregate stats ----------------------------------------------------
     def total_bytes_received(self) -> int:
         return sum(s.bytes_received for s in self.stats)

@@ -123,6 +123,25 @@ def serve_table(doc) -> str:
     return "\n".join(out)
 
 
+def fault_table(doc) -> str:
+    """BENCH_fault.json artifact -> recovery-policy comparison table."""
+    out = ["| pattern | policy | failures | degradation | recomputed "
+           "| chunks lost | re-replicated B |",
+           "|---|---|---|---|---|---|---|"]
+    for r in doc["rows"]:
+        out.append(
+            f"| {r['pattern']} | {r['policy']} | {r['n_failures']} | "
+            f"{r['degradation']:.2f}x | "
+            f"{r['tasks_recomputed']}/{r['n_tasks']} | "
+            f"{r['chunks_lost']} | {r['bytes_rereplicated']} |")
+    p = doc.get("params", {})
+    out.append("")
+    out.append(f"p={p.get('p')}, replicas={p.get('replicas')}, "
+               f"kills at {p.get('kill_at')} of the fault-free makespan; "
+               f"every cell's result is bitwise identical to fault-free")
+    return "\n".join(out)
+
+
 def main() -> None:
     target = pathlib.Path(sys.argv[1] if len(sys.argv) > 1
                           else "experiments/dryrun")
@@ -134,6 +153,9 @@ def main() -> None:
         elif doc.get("bench") == "serve":
             print(f"## Plan serving ({target.name})\n")
             print(serve_table(doc))
+        elif doc.get("bench") == "fault":
+            print(f"## Fault recovery ({target.name})\n")
+            print(fault_table(doc))
         elif "counters" in doc:
             print(f"## Metrics ({target.name})\n")
             print(metrics_table([doc]))

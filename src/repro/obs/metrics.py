@@ -155,6 +155,17 @@ def from_sim_report(rep) -> MetricSet:
     ms.add("busy_time", "s", rep.busy_time)
     ms.add("steals", "steals", rep.steals)
     ms.add("makespan", "s", rep.makespan)
+    # recovery counters (DESIGN.md §10) appear only when a fault was
+    # actually injected, so fault-free metric sets — including the pinned
+    # bit-for-bit artifact reproductions — keep their exact legacy shape
+    if getattr(rep, "fault_events", None) or getattr(rep, "workers_failed",
+                                                     None):
+        ms.add("workers_failed", "workers", len(rep.workers_failed))
+        ms.add("chunks_lost", "chunks", rep.chunks_lost)
+        ms.add("bytes_lost", "B", rep.bytes_lost)
+        ms.add("tasks_recomputed", "tasks", rep.tasks_recomputed)
+        ms.add("bytes_rereplicated", "B", rep.bytes_rereplicated)
+        ms.add("chunks_recovered", "chunks", rep.chunks_recovered)
     return ms
 
 

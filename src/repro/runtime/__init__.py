@@ -15,6 +15,14 @@ _EXPORTS = {
     "TaskEvent": ("trace", "TaskEvent"),
     "CriticalPath": ("trace", "CriticalPath"),
     "critical_path": ("trace", "critical_path"),
+    # fault schedules + recovery policies for the simulator (DESIGN.md §10)
+    "FaultEvent": ("recovery", "FaultEvent"),
+    "FaultSchedule": ("recovery", "FaultSchedule"),
+    "RecoveryManager": ("recovery", "RecoveryManager"),
+    "kill": ("recovery", "kill"),
+    "slow": ("recovery", "slow"),
+    "join": ("recovery", "join"),
+    "leave": ("recovery", "leave"),
     # gradient compression (jax)
     "compressed_grad_tree": ("compression", "compressed_grad_tree"),
     "dequantize_int8": ("compression", "dequantize_int8"),

@@ -22,7 +22,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Callable, Optional
+from typing import Any, Callable, Optional
 
 import numpy as np
 
@@ -38,29 +38,40 @@ class WorkerFailure(RuntimeError):
 
 @dataclasses.dataclass
 class HeartbeatMonitor:
+    """Per-worker liveness/straggler detection over an injectable clock.
+
+    ``clock`` defaults to wall time (:func:`time.monotonic`); the runtime
+    simulator passes its own callable so heartbeats, timeouts and
+    straggler detection can all be driven in *virtual* time.
+    """
     n_workers: int
     timeout: float = 30.0
     straggler_factor: float = 2.0
+    clock: Callable[[], float] = time.monotonic
 
     def __post_init__(self):
-        now = time.monotonic()
+        now = self.clock()
         self.last_seen = np.full(self.n_workers, now)
         self.step_times: list[list[float]] = [[] for _ in
                                               range(self.n_workers)]
 
     def beat(self, worker: int, step_time: Optional[float] = None):
-        self.last_seen[worker] = time.monotonic()
+        self.last_seen[worker] = self.clock()
         if step_time is not None:
             self.step_times[worker].append(step_time)
 
     def failed_workers(self) -> list[int]:
-        now = time.monotonic()
+        now = self.clock()
         return [w for w in range(self.n_workers)
                 if now - self.last_seen[w] > self.timeout]
 
     def stragglers(self) -> list[int]:
         recent = [np.mean(t[-5:]) if t else np.nan
                   for t in self.step_times]
+        # before any worker reports a step time every entry is NaN and
+        # np.nanmedian would emit an "All-NaN slice" RuntimeWarning
+        if not any(np.isfinite(r) for r in recent):
+            return []
         med = np.nanmedian(recent)
         if not np.isfinite(med):
             return []
@@ -70,13 +81,31 @@ class HeartbeatMonitor:
 
 @dataclasses.dataclass
 class FaultInjector:
-    """fail_at: {step: worker}; raises WorkerFailure when reached."""
-    fail_at: dict
+    """Deterministic failure schedule: raises WorkerFailure when reached.
+
+    ``fail_at`` is a list of ``(step, worker)`` pairs with one-shot pop
+    semantics: each entry fires exactly once, soonest step first, so two
+    failures at the *same* step are expressible — the first ``check(s)``
+    raises the first entry and the restarted run's next ``check(s)``
+    raises the second.  The legacy ``{step: worker}`` dict form is still
+    accepted (it can hold at most one failure per step).
+    """
+    fail_at: Any
+
+    def __post_init__(self):
+        pairs = (self.fail_at.items() if isinstance(self.fail_at, dict)
+                 else self.fail_at)
+        self._schedule = sorted((int(s), int(w)) for s, w in pairs)
+
+    @property
+    def schedule(self) -> list:
+        """Remaining ``(step, worker)`` failures, soonest first."""
+        return list(self._schedule)
 
     def check(self, step: int):
-        if step in self.fail_at:
-            w = self.fail_at.pop(step)
-            raise WorkerFailure(w, step)
+        if self._schedule and self._schedule[0][0] == step:
+            s, w = self._schedule.pop(0)
+            raise WorkerFailure(w, s)
 
 
 @dataclasses.dataclass

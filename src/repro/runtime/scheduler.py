@@ -56,6 +56,7 @@ from typing import Optional
 from repro.core.chunks import ChunkId, ChunkStore
 from repro.core.tasks import CostModel, CTGraph
 
+from .recovery import FaultSchedule, RecoveryManager, as_fault_schedule
 from .trace import CriticalPath, TaskEvent, Trace, critical_path
 
 PLACEMENTS = ("parent-worker", "round-robin", "random")
@@ -82,6 +83,25 @@ class SimReport:
     steal_time_s: float = 0.0
     trace: Optional[Trace] = None
     crit: Optional[CriticalPath] = None
+    # fault/recovery counters (DESIGN.md §10): all zero on fault-free runs
+    chunks_lost: int = 0
+    bytes_lost: int = 0
+    tasks_recomputed: int = 0
+    bytes_rereplicated: int = 0
+    chunks_recovered: int = 0
+    workers_failed: list[int] = dataclasses.field(default_factory=list)
+    fault_events: list[dict] = dataclasses.field(default_factory=list)
+
+    @property
+    def n_failures(self) -> int:
+        """Worker deaths applied during (or inherited by) this run."""
+        return len(self.workers_failed)
+
+    def degradation_vs(self, baseline: "SimReport") -> float:
+        """Makespan ratio against a fault-free reference run."""
+        if baseline.makespan <= 0:
+            return float("inf") if self.makespan > 0 else 1.0
+        return self.makespan / baseline.makespan
 
     @property
     def avg_bytes_received(self) -> float:
@@ -144,6 +164,16 @@ class SimReport:
         }
         if self.crit is not None:
             d.update(self.crit.to_dict())
+        if self.fault_events or self.workers_failed:
+            d.update({
+                "workers_failed": list(self.workers_failed),
+                "fault_events": list(self.fault_events),
+                "chunks_lost": self.chunks_lost,
+                "bytes_lost": self.bytes_lost,
+                "tasks_recomputed": self.tasks_recomputed,
+                "bytes_rereplicated": self.bytes_rereplicated,
+                "chunks_recovered": self.chunks_recovered,
+            })
         return d
 
 
@@ -204,6 +234,27 @@ class Scheduler:
         self.placement: dict[int, ChunkId] = {}   # node id -> chunk id
         self._owner_of_node: dict[int, int] = {}  # node id -> executing worker
         self._chunk_counter = 0                   # round-robin state
+        # fault state persists across runs: a worker killed mid-phase stays
+        # dead for every later phase/replay on this scheduler
+        self._dead: set[int] = set()
+        self._left: set[int] = set()              # graceful departures
+        self._slow: dict[int, float] = {}         # straggler factors
+        self.recovery = RecoveryManager(self)
+
+    # -- worker liveness ----------------------------------------------------
+    def live_workers(self) -> list[int]:
+        """Workers currently able to run tasks / own new chunks."""
+        return [w for w in range(self.n_workers)
+                if w not in self._dead and w not in self._left]
+
+    def _remap(self, worker: int) -> int:
+        """A live stand-in for ``worker`` (itself when alive)."""
+        if worker not in self._dead and worker not in self._left:
+            return worker
+        live = self.live_workers()
+        if not live:
+            raise RuntimeError("fault simulation: every worker is dead")
+        return live[worker % len(live)]
 
     # -- lifecycle ----------------------------------------------------------
     def _configure(self, n_workers: Optional[int], placement: Optional[str]
@@ -243,7 +294,8 @@ class Scheduler:
             s.dedup_hits = 0
             s.flops_executed = 0.0
 
-    def replay(self, g: CTGraph, nids) -> SimReport:
+    def replay(self, g: CTGraph, nids,
+               faults: Optional[FaultSchedule] = None) -> SimReport:
         """Re-simulate an already-simulated *fixed* task program.
 
         Compiled-Plan re-execution (api/plan.py) registers zero new
@@ -257,12 +309,14 @@ class Scheduler:
         one iteration's communication.
         """
         if self.store is None:          # nothing simulated yet: plain run
-            return self.run(g, only=self.unsimulated_closure(g, nids))
+            return self.run(g, only=self.unsimulated_closure(g, nids),
+                            faults=faults)
         self.release(g, nids, forget_owner=True)
         # restrict the re-run to the program (plus any genuinely
         # unsimulated prerequisites): other pending work — e.g. another
         # compiled-but-not-yet-simulated plan — keeps its own report
-        return self.run(g, only=self.unsimulated_closure(g, nids))
+        return self.run(g, only=self.unsimulated_closure(g, nids),
+                        faults=faults)
 
     def release(self, g: CTGraph, nids, forget_owner: bool = False) -> None:
         """Free the chunks these nodes placed; drop their placement
@@ -281,6 +335,8 @@ class Scheduler:
             if cid is not None and node.alias_of is None \
                     and node.value is not None:
                 self.store.free(cid)
+            for rcid in self.recovery.drop_replicas(nid):
+                self.store.free(rcid)
 
     def has_simulated(self, nids) -> bool:
         """Whether any of these nodes has already been executed on the
@@ -315,23 +371,39 @@ class Scheduler:
     # -- the discrete-event loop -------------------------------------------
     def run(self, g: CTGraph, n_workers: Optional[int] = None,
             placement: Optional[str] = None, start_worker: int = 0,
-            only: Optional[set] = None) -> SimReport:
+            only: Optional[set] = None,
+            faults: Optional[FaultSchedule] = None) -> SimReport:
         """Simulate all not-yet-simulated nodes of ``g``; returns stats.
 
         ``only`` restricts the pass to a node subset (see
         :meth:`unsimulated_closure`): nodes outside it stay pending for a
         later run.
+
+        ``faults`` injects a deterministic :class:`~repro.runtime.
+        recovery.FaultSchedule` into this run's simulated timeline:
+        worker deaths drop the dead worker's ChunkStore slice and recover
+        by replica re-pointing or lineage recompute (the schedule's
+        ``recovery`` policy), stragglers scale a worker's compute time,
+        and join/leave events grow/shrink the pool mid-run.  Events later
+        than the run's end never fire; dead/left workers stay out of the
+        pool for every later run on this scheduler.  Fault handling never
+        touches task *values* — only placement, timing and the recovery
+        counters — so results stay bitwise identical to a fault-free run.
         """
         self._configure(n_workers, placement)
-        p = self.n_workers
+        schedule = as_fault_schedule(faults)
+        self.recovery.begin_run(schedule)
+        events = list(schedule.events) if schedule is not None else []
         g.flush()   # batched leaf waves must run so per-task flops are final
+        tr = g.tracer
         todo = [n for n in g.nodes if n.nid not in self._owner_of_node
                 and (only is None or n.nid in only)]
-        trace = Trace(p)
+        trace = Trace(self.n_workers)
         if not todo:
             return self._report(0.0, 0, 0.0, trace, g, set())
         todo_ids = {n.nid for n in todo}
         done_before = set(self._owner_of_node)
+        done_run: set = set()           # nids completed in *this* run
 
         # dependency bookkeeping: a task is runnable once its parent has
         # executed (it is then "registered") and all fetched deps are done.
@@ -353,12 +425,17 @@ class Scheduler:
             registered[n.nid] = (n.parent is None or n.parent not in todo_ids)
             ready_after[n.nid] = 0.0
 
-        deques: list[list[tuple[int, float]]] = [[] for _ in range(p)]
-        free_at = [0.0] * p
+        deques: list[list[tuple[int, float]]] = [
+            [] for _ in range(self.n_workers)]
+        free_at = [0.0] * self.n_workers
         n_steals = 0
         steal_time = 0.0
+        # tasks whose worker died mid-execution (redistributed at the kill)
+        aborted: dict[int, list[tuple[int, float]]] = {}
+        kill_time = schedule.kill_times() if schedule is not None else {}
 
         def push_ready(nid: int, worker: int) -> None:
+            worker = self._remap(worker)
             self._owner_of_node[nid] = worker
             deques[worker].append((nid, ready_after[nid]))
 
@@ -367,11 +444,139 @@ class Scheduler:
                 push_ready(n.nid, start_worker)
 
         time_now = 0.0
-        heap = [(0.0, w) for w in range(p)]
+        # fault events ride the same heap as negative sentinel ids: an
+        # event at time t pops before any worker whose clock reaches t,
+        # and same-time events apply in schedule order
+        n_ev = len(events)
+        heap = [(0.0, w) for w in self.live_workers()]
+        heap += [(ev.t, i - n_ev) for i, ev in enumerate(events)]
         heapq.heapify(heap)
         executed = 0
         total = len(todo)
         blocked: list[tuple[float, int]] = []   # workers with no ready work
+
+        def wake_blocked(tmin: float) -> None:
+            nonlocal blocked
+            for bt, bw in blocked:
+                heapq.heappush(heap, (max(bt, tmin), bw))
+            blocked = []
+
+        def inject(nids, t_ev: float) -> list:
+            """Put already-executed nodes back on the todo list (lineage
+            recompute).  Returns the nids actually (re-)enqueued."""
+            nonlocal total
+            injected = []
+            for nid in sorted(nids):
+                if nid in todo_ids and nid not in done_run:
+                    continue            # still pending: nothing to redo
+                done_run.discard(nid)
+                todo_ids.add(nid)
+                ready_after[nid] = t_ev
+                par = g.nodes[nid].parent
+                # runnable once the parent executed: parents re-injected in
+                # the same batch have lower nids and were re-added already
+                registered[nid] = (par is None or par not in todo_ids
+                                   or par in done_run)
+                injected.append(nid)
+            if not injected:
+                return injected
+            total += len(injected)
+            # rebuild dependency counts from scratch: a re-injected
+            # producer flips its consumers' satisfied edges back on
+            dependents.clear()
+            for x in sorted(todo_ids):
+                if x in done_run:
+                    continue
+                cnt = 0
+                for d in g.nodes[x].deps:
+                    dn = g.resolve(d.nid)
+                    if dn is not None and dn in todo_ids \
+                            and dn not in done_run:
+                        cnt += 1
+                        dependents.setdefault(dn, []).append(x)
+                pending[x] = cnt
+            # queued entries whose deps were just lost are not runnable
+            # anymore; they re-enter when the recomputed dep completes
+            for dq in deques:
+                dq[:] = [(q, rt) for q, rt in dq if pending[q] == 0]
+            live = self.live_workers()
+            qi = 0
+            for nid in injected:
+                if registered[nid] and pending[nid] == 0:
+                    push_ready(nid, live[qi % len(live)])
+                    qi += 1
+            return injected
+
+        def apply_event(ev) -> None:
+            log = {"t": ev.t, "action": ev.action, "worker": ev.worker}
+            if ev.action == "join":
+                w_new = self.store.add_worker()
+                self.n_workers = self.store.n_workers
+                deques.append([])
+                free_at.append(ev.t)
+                trace.n_workers = self.n_workers
+                heapq.heappush(heap, (ev.t, w_new))
+                log["worker"] = w_new
+                tr.instant("fault.join", track="fault", worker=w_new,
+                           t_sim=ev.t)
+            elif ev.action == "slow":
+                self._slow[ev.worker] = float(ev.factor)
+                log["factor"] = ev.factor
+                tr.instant("fault.slow", track="fault", worker=ev.worker,
+                           factor=ev.factor, t_sim=ev.t)
+            else:                       # "kill" / "leave"
+                w = ev.worker
+                if not (0 <= w < self.n_workers) or w in self._dead \
+                        or w in self._left:
+                    log["skipped"] = True
+                    self.recovery.events_applied.append(log)
+                    return
+                orphans = list(deques[w]) + aborted.pop(w, [])
+                deques[w].clear()
+                if ev.action == "leave":
+                    self._left.add(w)
+                    tr.instant("fault.leave", track="fault", worker=w,
+                               t_sim=ev.t)
+                else:
+                    self._dead.add(w)
+                    n_chunks, n_bytes = self.store.drop_worker(w)
+                    self.recovery.chunks_lost += n_chunks
+                    self.recovery.bytes_lost += n_bytes
+                    log.update(chunks_lost=n_chunks, bytes_lost=n_bytes)
+                    tr.instant("fault.kill", track="fault", worker=w,
+                               t_sim=ev.t, chunks_lost=n_chunks,
+                               bytes_lost=n_bytes)
+                    with tr.span("fault.recover", track="fault", worker=w,
+                                 t_sim=ev.t,
+                                 policy=self.recovery.policy or "lineage"
+                                 ) as sp:
+                        recompute = self.recovery.on_death(g, w, done_run)
+                        injected = []
+                        if recompute:
+                            self.release(g, sorted(recompute),
+                                         forget_owner=True)
+                            closure = self.unsimulated_closure(g, recompute)
+                            injected = inject(closure, ev.t)
+                            self.recovery.tasks_recomputed += len(injected)
+                        log["tasks_recomputed"] = len(injected)
+                        sp.set(tasks_recomputed=len(injected),
+                               chunks_recovered=self.recovery
+                               .chunks_recovered)
+                # survivors inherit the lost worker's queued-but-unexecuted
+                # tasks (only entries still runnable after the rewiring)
+                live = self.live_workers()
+                if not live:
+                    raise RuntimeError(
+                        "fault simulation: every worker is dead")
+                runnable = [(q, rt) for q, rt in orphans
+                            if q in todo_ids and q not in done_run
+                            and pending.get(q, 1) == 0]
+                for i, (q, rt) in enumerate(runnable):
+                    tgt = live[i % len(live)]
+                    self._owner_of_node[q] = tgt
+                    deques[tgt].append((q, max(rt, ev.t)))
+            self.recovery.events_applied.append(log)
+            wake_blocked(ev.t)
 
         while executed < total:
             if not heap:
@@ -383,6 +588,11 @@ class Scheduler:
                 blocked = []
                 continue
             t, w = heapq.heappop(heap)
+            if w < 0:                   # fault-event sentinel
+                apply_event(events[w + n_ev])
+                continue
+            if w in self._dead or w in self._left:
+                continue                # stale entry of a removed worker
             time_now = max(time_now, t)
             nid = None
             stolen = False
@@ -390,7 +600,7 @@ class Scheduler:
             if got is not None:
                 nid, _ = got
             else:
-                victims = [v for v in range(p) if v != w
+                victims = [v for v in self.live_workers() if v != w
                            and any(rt <= t for _, rt in deques[v])]
                 if victims:
                     v = self.rng.choice(victims)
@@ -431,13 +641,28 @@ class Scheduler:
             remote_bytes = st.bytes_received - rb0
             remote_msgs = st.messages_received - rm0
 
+            # straggler factor scales the compute term only (fetch/push are
+            # network time); slow == 1.0 is bitwise-neutral
+            compute = (self.cost.task_overhead_s + node.cost
+                       + node.flops / self.cost.flops_per_s) \
+                * self._slow.get(w, 1.0)
+            t_kill = kill_time.get(w)
+            if t_kill is not None and t + compute + fetch_time > t_kill:
+                # the worker dies before this task can commit: the partial
+                # work is wasted and the task returns to the pool when the
+                # kill event fires (its chunk is never placed)
+                st.busy_time += max(0.0, t_kill - t)
+                aborted.setdefault(w, []).append((nid, ready_after[nid]))
+                continue
+
             # produce + place the output chunk
             push_time = 0.0
             pushed_bytes = 0
             if node.alias_of is None and node.value is not None:
                 owner = _place(self.placement_policy, w, self._chunk_counter,
-                               p, self.rng)
+                               self.n_workers, self.rng)
                 self._chunk_counter += 1
+                owner = self._remap(owner)
                 # charge ship time only for bytes the store actually moved:
                 # a dedup hit resolves to an existing chunk id, no transfer
                 pushed_before = self.store.stats[owner].bytes_pushed
@@ -449,14 +674,18 @@ class Scheduler:
                     pushed_bytes = shipped
                     push_time = shipped / self.cost.bandwidth_Bps \
                         + self.cost.latency_s
+                # r-way replication at registration (DESIGN.md §10)
+                rbytes, rmsgs = self.recovery.on_place(
+                    nid, cid, node.out_nbytes, self.live_workers())
+                if rbytes:
+                    push_time += rbytes / self.cost.bandwidth_Bps \
+                        + rmsgs * self.cost.latency_s
             elif node.alias_of is not None:
                 rn = g.resolve(nid)
                 if rn in self.placement:
                     self.placement[nid] = self.placement[rn]
 
-            dur = (self.cost.task_overhead_s + node.cost
-                   + node.flops / self.cost.flops_per_s + fetch_time
-                   + push_time)
+            dur = compute + fetch_time + push_time
             t_end = t + dur
             st.tasks_executed += 1
             st.busy_time += dur
@@ -468,6 +697,7 @@ class Scheduler:
                                    pushed_bytes=pushed_bytes))
 
             executed += 1
+            done_run.add(nid)
             for c in node.children:
                 if c in registered and not registered[c]:
                     registered[c] = True
@@ -497,7 +727,15 @@ class Scheduler:
                 trace: Trace, g: CTGraph, done_before: set) -> SimReport:
         st = self.store.stats
         crit = critical_path(g, trace, done_before) if len(trace) else None
+        rec = self.recovery
         return SimReport(
+            chunks_lost=rec.chunks_lost,
+            bytes_lost=rec.bytes_lost,
+            tasks_recomputed=rec.tasks_recomputed,
+            bytes_rereplicated=rec.bytes_rereplicated,
+            chunks_recovered=rec.chunks_recovered,
+            workers_failed=sorted(self._dead),
+            fault_events=list(rec.events_applied),
             makespan=makespan,
             bytes_received=[s.bytes_received for s in st],
             messages_received=[s.messages_received for s in st],
@@ -519,7 +757,9 @@ class Scheduler:
 
 def simulate(g: CTGraph, n_workers: int, placement: str = "parent-worker",
              cost: CostModel | None = None, cache_bytes: int = 1 << 62,
-             seed: int = 0) -> SimReport:
+             seed: int = 0,
+             faults: Optional[FaultSchedule] = None) -> SimReport:
     """One-shot convenience: simulate the whole graph in a single phase."""
     sched = Scheduler(cost=cost, cache_bytes=cache_bytes, seed=seed)
-    return sched.run(g, n_workers=n_workers, placement=placement)
+    return sched.run(g, n_workers=n_workers, placement=placement,
+                     faults=faults)

@@ -144,13 +144,19 @@ def critical_path(graph, trace: Trace,
     if not trace.events:
         return CriticalPath(work_s=0.0, length_s=0.0, path=[], n_tasks=0)
     done_before = done_before or set()
+    # a fault-recovery run re-executes lost producers, so a nid can appear
+    # twice; only the last execution's chunk survives, so keep the last
+    # event per nid (processing order stays completion order, which keeps
+    # the finish/pred pass acyclic even across forward alias links)
+    last = {ev.nid: i for i, ev in enumerate(trace.events)}
+    events = [ev for i, ev in enumerate(trace.events) if last[ev.nid] == i]
     dur: dict[int, float] = {}
-    for ev in trace.events:
+    for ev in events:
         dur[ev.nid] = ev.duration
     finish: dict[int, float] = {}
     pred: dict[int, Optional[int]] = {}
     best_nid: Optional[int] = None
-    for ev in trace.events:           # events appended in completion order,
+    for ev in events:                 # events appended in completion order,
         nid = ev.nid                  # but we walk edges by node id anyway
         node = graph.nodes[nid]
         t0, p0 = 0.0, None
@@ -167,7 +173,7 @@ def critical_path(graph, trace: Trace,
             best_nid = nid
     path: list[int] = []
     cur = best_nid
-    while cur is not None:
+    while cur is not None and cur not in path:
         path.append(cur)
         cur = pred[cur]
     path.reverse()

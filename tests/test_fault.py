@@ -1,0 +1,439 @@
+"""Fault-tolerant, elastic scheduling with lineage recovery (DESIGN.md §10).
+
+Pins the bugfix-PR claims four ways:
+
+1. **Store mechanics** — ``drop_worker`` loses exactly the dead worker's
+   slice, ``add_worker`` grows every per-worker structure, ``replicate``
+   makes a physical (non-deduped) copy charged to the destination.
+2. **Recovery policies** — lineage recompute re-runs the *minimal* task
+   closure (strict subset of the DAG); ``"none"`` restarts the phase and
+   costs more; replication re-points at survivors (zero recompute after a
+   single failure) and restores the factor.
+3. **Bitwise identity** — the simulator never touches task values: every
+   faulted run (kill, straggler, join/leave, double kill) produces output
+   bitwise identical to the fault-free run, on numpy and pallas engines,
+   eagerly and through compiled-Plan replay.
+4. **Observability** — kills/recoveries emit ``fault.*`` spans; SimReport
+   carries the recovery counters only when a schedule was injected, so
+   fault-free reports/metrics keep their exact legacy shape.
+"""
+import numpy as np
+import pytest
+
+from repro import Session
+from repro.core.chunks import ChunkStore
+from repro.core.patterns import banded_mask, values_for_mask
+from repro.runtime.recovery import (ACTIONS, RECOVERIES, FaultEvent,
+                                    FaultSchedule, as_fault_schedule, join,
+                                    kill, leave, slow)
+
+N, LEAF_N, BS, P = 128, 32, 8, 4
+
+
+def _operands(n=N, d=12):
+    a = values_for_mask(banded_mask(n, d), seed=1, symmetric=True)
+    b = values_for_mask(banded_mask(n, d), seed=2, symmetric=True)
+    return a, b
+
+
+def _multiply_session(engine="numpy", build_faults=None, **kw):
+    """Session with A, B built (simulated) and C = A @ B pending."""
+    kw.setdefault("leaf_n", LEAF_N)
+    kw.setdefault("bs", BS)
+    kw.setdefault("p", P)
+    kw.setdefault("seed", 0)
+    a, b = _operands()
+    sess = Session(engine=engine, **kw)
+    A, B = sess.from_dense(a), sess.from_dense(b)
+    sess.simulate(faults=build_faults)          # build phase
+    return sess, A @ B
+
+
+@pytest.fixture(scope="module")
+def baseline():
+    """Fault-free multiply: (report, dense result)."""
+    sess, C = _multiply_session()
+    rep = sess.simulate(fresh_stats=True)
+    return rep, C.to_dense()
+
+
+class TestChunkStoreFaults:
+    def test_drop_worker_loses_only_that_slice(self):
+        store = ChunkStore(n_workers=3)
+        c0 = store.register(0, np.ones(4), nbytes=32)
+        c1 = store.register(1, np.full(4, 2.0), nbytes=32)
+        store.fetch(2, c1)                       # worker 2 caches c1
+        n_chunks, n_bytes = store.drop_worker(1)
+        assert (n_chunks, n_bytes) == (1, 32)
+        assert np.array_equal(store.fetch(0, c0), np.ones(4))
+        with pytest.raises(KeyError):
+            store.fetch(2, c1)
+
+    def test_drop_worker_purges_dedup_index(self):
+        store = ChunkStore(n_workers=2)
+        v = np.arange(4.0)
+        c1 = store.register(1, v, nbytes=32)
+        store.drop_worker(1)
+        # same content must not dedup-resolve to the dead worker's chunk
+        c0 = store.register(0, v.copy(), nbytes=32)
+        assert c0.owner == 0 and c0 != c1
+        assert np.array_equal(store.fetch(0, c0), v)
+
+    def test_add_worker_grows_every_structure(self):
+        store = ChunkStore(n_workers=2)
+        w = store.add_worker()
+        assert w == 2 and store.n_workers == 3
+        assert len(store.stats) == 3
+        c = store.register(w, np.ones(2), nbytes=16)
+        assert c.owner == w
+        assert store.stats[w].owned_bytes == 16
+
+    def test_replicate_is_physical_copy_charged_to_dst(self):
+        store = ChunkStore(n_workers=2)
+        v = np.arange(8.0)
+        c = store.register(0, v, nbytes=64)
+        r = store.replicate(c, 1)
+        assert r.owner == 1 and r != c           # no dedup collapse
+        assert store.stats[1].owned_bytes == 64
+        assert store.stats[1].bytes_received == 64
+        store.drop_worker(0)
+        assert np.array_equal(store.fetch(1, r), v)   # copy survives
+
+
+class TestFaultSchedule:
+    def test_event_validation(self):
+        with pytest.raises(ValueError, match="unknown fault action"):
+            FaultEvent(0.0, "explode", 0)
+        with pytest.raises(ValueError, match="must be >= 0"):
+            kill(-1.0, 0)
+        with pytest.raises(ValueError, match="needs a worker"):
+            FaultEvent(0.0, "kill")
+        with pytest.raises(ValueError, match="factor must be > 0"):
+            slow(0.0, 1, 0.0)
+        assert join(1.0).worker is None          # join needs no worker
+
+    def test_schedule_validation_and_sorting(self):
+        with pytest.raises(ValueError, match="unknown recovery"):
+            FaultSchedule(recovery="checkpoint")
+        with pytest.raises(ValueError, match="replicas"):
+            FaultSchedule(recovery="replication", replicas=0)
+        fs = FaultSchedule(events=[kill(2.0, 1), slow(1.0, 0, 2.0),
+                                   kill(2.0, 0)])
+        assert [e.t for e in fs.events] == [1.0, 2.0, 2.0]
+        # stable: same-time kills stay in given order
+        assert [e.worker for e in fs.events[1:]] == [1, 0]
+        assert fs.kill_times() == {1: 2.0, 0: 2.0}
+
+    def test_as_fault_schedule_forms(self):
+        assert as_fault_schedule(None) is None
+        fs = FaultSchedule(events=[kill(1.0, 0)], recovery="none")
+        assert as_fault_schedule(fs) is fs
+        fs2 = as_fault_schedule([kill(1.0, 0), (0.5, "slow", 1, 3.0)])
+        assert isinstance(fs2, FaultSchedule)
+        assert fs2.recovery == "lineage"         # default policy
+        assert [e.action for e in fs2.events] == ["slow", "kill"]
+
+    def test_exports(self):
+        import repro.runtime as rt
+        for name in ("FaultEvent", "FaultSchedule", "RecoveryManager",
+                     "kill", "slow", "join", "leave"):
+            assert getattr(rt, name) is not None
+        assert set(RECOVERIES) == {"none", "replication", "lineage"}
+        assert set(ACTIONS) == {"kill", "slow", "join", "leave"}
+
+
+class TestLineageRecovery:
+    def test_kill_recovers_and_result_is_bitwise_identical(self, baseline):
+        rep0, dense0 = baseline
+        sess, C = _multiply_session()
+        fs = FaultSchedule(events=[kill(0.5 * rep0.makespan, 2)],
+                           recovery="lineage")
+        rep = sess.simulate(fresh_stats=True, faults=fs)
+        assert rep.workers_failed == [2]
+        assert rep.n_failures == 1
+        assert rep.chunks_lost > 0 and rep.bytes_lost > 0
+        # minimal closure: a strict subset of the phase's DAG re-ran
+        assert 0 < rep.tasks_recomputed < rep0.n_tasks
+        assert np.array_equal(C.to_dense(), dense0)
+
+    def test_dead_worker_owns_nothing_after_recovery(self, baseline):
+        rep0, _ = baseline
+        sess, C = _multiply_session()
+        sess.simulate(fresh_stats=True,
+                      faults=FaultSchedule(events=[kill(
+                          0.5 * rep0.makespan, 1)]))
+        sched = sess.scheduler
+        assert all(cid.owner != 1 for cid in sched.placement.values())
+        assert 1 not in sched.live_workers()
+
+    def test_none_policy_restarts_phase_and_costs_more(self, baseline):
+        rep0, dense0 = baseline
+        t_kill = 0.5 * rep0.makespan
+
+        sess_l, C_l = _multiply_session()
+        rep_l = sess_l.simulate(fresh_stats=True, faults=FaultSchedule(
+            events=[kill(t_kill, 2)], recovery="lineage"))
+        sess_n, C_n = _multiply_session()
+        rep_n = sess_n.simulate(fresh_stats=True, faults=FaultSchedule(
+            events=[kill(t_kill, 2)], recovery="none"))
+
+        # full re-run of everything done so far dwarfs the lineage closure
+        assert rep_n.tasks_recomputed > rep_l.tasks_recomputed
+        assert rep_n.makespan >= rep_l.makespan
+        assert np.array_equal(C_n.to_dense(), dense0)
+        assert np.array_equal(C_l.to_dense(), dense0)
+
+    def test_replication_bounds_recompute(self, baseline):
+        rep0, dense0 = baseline
+        fs_build = FaultSchedule(events=[], recovery="replication")
+        sess, C = _multiply_session(build_faults=fs_build)
+        rep = sess.simulate(fresh_stats=True, faults=FaultSchedule(
+            events=[kill(0.5 * rep0.makespan, 2)],
+            recovery="replication", replicas=2))
+        # one failure with r=2: every lost chunk had a surviving copy
+        assert rep.tasks_recomputed == 0
+        assert rep.chunks_recovered > 0
+        assert rep.bytes_rereplicated > 0        # factor restored
+        assert np.array_equal(C.to_dense(), dense0)
+
+    def test_two_kills_at_same_instant(self, baseline):
+        rep0, dense0 = baseline
+        t = 0.4 * rep0.makespan
+        sess, C = _multiply_session()
+        rep = sess.simulate(fresh_stats=True, faults=FaultSchedule(
+            events=[kill(t, 1), kill(t, 3)]))
+        assert rep.workers_failed == [1, 3]
+        applied = [e for e in rep.fault_events if not e.get("skipped")]
+        assert [e["worker"] for e in applied] == [1, 3]  # schedule order
+        assert np.array_equal(C.to_dense(), dense0)
+
+    def test_kill_after_makespan_never_fires(self, baseline):
+        rep0, dense0 = baseline
+        sess, C = _multiply_session()
+        rep = sess.simulate(fresh_stats=True, faults=FaultSchedule(
+            events=[kill(10.0 * rep0.makespan + 1.0, 2)]))
+        assert rep.workers_failed == []
+        assert rep.tasks_recomputed == 0 and rep.chunks_lost == 0
+        assert np.array_equal(C.to_dense(), dense0)
+
+    def test_deterministic_under_identical_schedule(self, baseline):
+        rep0, _ = baseline
+        fs = FaultSchedule(events=[kill(0.5 * rep0.makespan, 2)])
+        reps = []
+        for _ in range(2):
+            sess, C = _multiply_session()
+            rep = sess.simulate(fresh_stats=True, faults=fs)
+            reps.append((rep.to_dict(), C.to_dense()))
+        d0, d1 = reps[0][0], reps[1][0]
+        d0.pop("trace", None), d1.pop("trace", None)
+        assert d0 == d1
+        assert np.array_equal(reps[0][1], reps[1][1])
+
+    def test_degradation_vs_fault_free(self, baseline):
+        rep0, _ = baseline
+        sess, C = _multiply_session()
+        rep = sess.simulate(fresh_stats=True, faults=FaultSchedule(
+            events=[kill(0.5 * rep0.makespan, 2)]))
+        deg = rep.degradation_vs(rep0)
+        assert deg >= 1.0                        # a failure never helps
+        assert deg == rep.makespan / rep0.makespan
+
+    def test_every_worker_dead_raises(self, baseline):
+        rep0, _ = baseline
+        sess, _ = _multiply_session()
+        evs = [kill(0.1 * rep0.makespan, w) for w in range(P)]
+        with pytest.raises(RuntimeError, match="every worker is dead"):
+            sess.simulate(fresh_stats=True, faults=FaultSchedule(events=evs))
+
+
+class TestFaultFreeNeutrality:
+    """An injected schedule must not perturb fault-free numerics/reports."""
+
+    def test_empty_schedule_is_report_identical(self, baseline):
+        rep0, dense0 = baseline
+        sess, C = _multiply_session()
+        rep = sess.simulate(fresh_stats=True,
+                            faults=FaultSchedule(events=[]))
+        assert rep.makespan == rep0.makespan
+        d0, d1 = rep0.to_dict(), rep.to_dict()
+        d0.pop("trace", None), d1.pop("trace", None)
+        assert d0 == d1
+        assert np.array_equal(C.to_dense(), dense0)
+
+    def test_fault_free_report_has_no_recovery_keys(self, baseline):
+        rep0, _ = baseline
+        d = rep0.to_dict()
+        assert "tasks_recomputed" not in d and "workers_failed" not in d
+        sess, _ = _multiply_session()
+        rep = sess.simulate(fresh_stats=True, faults=FaultSchedule(
+            events=[kill(0.5 * rep0.makespan, 2)]))
+        d = rep.to_dict()
+        assert d["workers_failed"] == [2]
+        assert d["tasks_recomputed"] > 0
+
+    def test_metrics_grow_recovery_counters_only_under_faults(self,
+                                                              baseline):
+        from repro.obs.metrics import from_sim_report
+        rep0, _ = baseline
+        assert "tasks_recomputed" not in from_sim_report(rep0).names()
+        sess, _ = _multiply_session()
+        rep = sess.simulate(fresh_stats=True, faults=FaultSchedule(
+            events=[kill(0.5 * rep0.makespan, 2)]))
+        ms = from_sim_report(rep)
+        assert ms["workers_failed"].total == 1
+        assert ms["tasks_recomputed"].total == rep.tasks_recomputed
+
+
+class TestElasticity:
+    def test_join_grows_pool_and_new_worker_executes(self, baseline):
+        rep0, dense0 = baseline
+        sess, C = _multiply_session()
+        rep = sess.simulate(fresh_stats=True, faults=FaultSchedule(
+            events=[join(0.2 * rep0.makespan)]))
+        assert rep.n_workers == P + 1
+        assert len(rep.tasks_per_worker) == P + 1
+        assert rep.tasks_per_worker[P] > 0       # the joiner stole work
+        assert np.array_equal(C.to_dense(), dense0)
+
+    def test_leave_is_graceful(self, baseline):
+        rep0, dense0 = baseline
+        t_leave = 0.3 * rep0.makespan
+        sess, C = _multiply_session()
+        rep = sess.simulate(fresh_stats=True, faults=FaultSchedule(
+            events=[leave(t_leave, 1)]))
+        # chunks survive: nothing lost, nothing recomputed
+        assert rep.chunks_lost == 0 and rep.tasks_recomputed == 0
+        assert rep.workers_failed == []          # leave is not a death
+        assert all(ev.worker != 1 for ev in rep.trace.events
+                   if ev.start > t_leave)
+        assert np.array_equal(C.to_dense(), dense0)
+
+    def test_straggler_slows_makespan_not_values(self, baseline):
+        rep0, dense0 = baseline
+        sess, C = _multiply_session()
+        rep = sess.simulate(fresh_stats=True, faults=FaultSchedule(
+            events=[slow(0.0, 0, 8.0)]))
+        assert rep.makespan > rep0.makespan
+        assert np.array_equal(C.to_dense(), dense0)
+
+    def test_unit_slow_factor_is_bitwise_neutral(self, baseline):
+        rep0, dense0 = baseline
+        sess, C = _multiply_session()
+        rep = sess.simulate(fresh_stats=True, faults=FaultSchedule(
+            events=[slow(0.0, 0, 1.0)]))
+        assert rep.makespan == rep0.makespan     # *1.0 is IEEE-neutral
+        assert np.array_equal(C.to_dense(), dense0)
+
+    def test_kill_of_unknown_or_dead_worker_is_skipped(self, baseline):
+        rep0, dense0 = baseline
+        t = 0.5 * rep0.makespan
+        sess, C = _multiply_session()
+        rep = sess.simulate(fresh_stats=True, faults=FaultSchedule(
+            events=[kill(t, 2), kill(t + 1e-6, 2), kill(t + 2e-6, 99)]))
+        assert rep.workers_failed == [2]
+        skipped = [e for e in rep.fault_events if e.get("skipped")]
+        assert len(skipped) == 2
+        assert np.array_equal(C.to_dense(), dense0)
+
+
+class TestObservability:
+    def test_fault_spans_emitted(self, baseline):
+        rep0, _ = baseline
+        a, b = _operands()
+        sess = Session(leaf_n=LEAF_N, bs=BS, p=P, seed=0, trace=True)
+        A, B = sess.from_dense(a), sess.from_dense(b)
+        sess.simulate()
+        C = A @ B
+        sess.simulate(fresh_stats=True, faults=FaultSchedule(
+            events=[kill(0.5 * rep0.makespan, 2)]))
+        C.to_dense()
+        tr = sess.tracer
+        kills = tr.find("fault.kill")
+        assert len(kills) == 1
+        assert kills[0].attrs["worker"] == 2
+        assert kills[0].attrs["chunks_lost"] > 0
+        recs = tr.find("fault.recover")
+        assert len(recs) == 1
+        assert recs[0].attrs["tasks_recomputed"] > 0
+        assert recs[0].attrs["policy"] == "lineage"
+
+    def test_fault_events_json_ready(self, baseline):
+        import json
+        rep0, _ = baseline
+        sess, _ = _multiply_session()
+        rep = sess.simulate(fresh_stats=True, faults=FaultSchedule(
+            events=[kill(0.5 * rep0.makespan, 2), join(0.6 * rep0.makespan)]))
+        json.dumps(rep.to_dict())                # must not raise
+        actions = [e["action"] for e in rep.fault_events]
+        assert actions == ["kill", "join"]
+
+
+class TestPlanReplayUnderFaults:
+    """The acceptance pin: failure-injected Plan replay is bitwise
+    identical to the failure-free replay, on both leaf engines."""
+
+    @pytest.mark.parametrize("engine", ["numpy",
+                                        pytest.param("pallas",
+                                                     marks=pytest.mark.pallas)])
+    def test_replay_bitwise_identical_under_kill(self, engine):
+        a, _ = _operands()
+
+        def run(faults):
+            sess = Session(engine=engine, leaf_n=LEAF_N, bs=BS, p=P,
+                           seed=0, lazy=True)
+            X = sess.from_dense(a, name="X")
+            plan = sess.compile(X @ X)
+            plan.run()
+            rep0 = plan.simulate()               # fault-free replay: M0
+            rep = plan.simulate(faults=faults(rep0.makespan))
+            Y = plan.run(X=a)                    # reuse plan post-recovery
+            return Y.to_dense(), rep
+
+        base, rep_b = run(lambda M0: None)
+        faulted, rep_f = run(lambda M0: FaultSchedule(
+            events=[kill(0.5 * M0, 2)]))
+        assert rep_f.tasks_recomputed > 0        # the fault really fired
+        assert rep_b.tasks_recomputed == 0
+        assert np.array_equal(base, faulted)     # bitwise, not allclose
+
+    @pytest.mark.slow
+    def test_replay_every_policy_identical(self):
+        a, _ = _operands()
+        outs = {}
+        for policy in (None, "lineage", "none", "replication"):
+            sess = Session(leaf_n=LEAF_N, bs=BS, p=P, seed=0, lazy=True)
+            X = sess.from_dense(a, name="X")
+            plan = sess.compile(X @ X)
+            plan.run()
+            rep0 = plan.simulate()
+            if policy is not None:
+                fs = FaultSchedule(events=[kill(0.5 * rep0.makespan, 1)],
+                                   recovery=policy)
+                plan.simulate(faults=fs)
+            out = plan.run(X=a).to_dense()
+            outs[policy or "fault-free"] = out
+        base = outs.pop("fault-free")
+        for policy, out in outs.items():
+            assert np.array_equal(base, out), policy
+
+
+class TestReplayReleaseAfterDeath:
+    """Satellite: replay/release vs dead-worker state (scheduler level)."""
+
+    def test_fresh_replay_avoids_dead_worker(self, baseline):
+        rep0, dense0 = baseline
+        sess, C = _multiply_session()
+        sess.simulate(fresh_stats=True, faults=FaultSchedule(
+            events=[kill(0.5 * rep0.makespan, 2)]))
+        dense1 = C.to_dense()
+        sched, g = sess.scheduler, sess.graph
+        nids = sorted(nid for nid in sched.placement
+                      if g.nodes[nid].alias_of is None)
+        sched.reset_stats()
+        rep = sched.replay(g, nids)
+        # nothing may run on, or be placed on, the dead worker
+        assert all(cid.owner != 2 for cid in sched.placement.values())
+        assert rep.tasks_per_worker[2] == 0
+        assert all(ev.worker != 2 for ev in rep.trace.events)
+        assert np.array_equal(C.to_dense(), dense1)
+        assert np.array_equal(dense1, dense0)

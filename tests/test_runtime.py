@@ -58,6 +58,26 @@ class TestHeartbeatMonitor:
         mon = HeartbeatMonitor(n_workers=2)
         assert mon.stragglers() == []
 
+    def test_no_step_times_emits_no_warning(self):
+        """Regression: np.nanmedian over an all-NaN window used to emit
+        an 'All-NaN slice' RuntimeWarning before the guard."""
+        import warnings
+        mon = HeartbeatMonitor(n_workers=3)
+        with warnings.catch_warnings():
+            warnings.simplefilter("error")
+            assert mon.stragglers() == []
+
+    def test_injectable_clock_drives_virtual_time(self):
+        now = [100.0]
+        mon = HeartbeatMonitor(n_workers=2, timeout=5.0,
+                               clock=lambda: now[0])
+        assert mon.failed_workers() == []
+        now[0] += 6.0                   # both workers silent past timeout
+        assert mon.failed_workers() == [0, 1]
+        mon.beat(1)                     # heartbeat stamped at virtual now
+        assert mon.failed_workers() == [0]
+        assert mon.last_seen[1] == 106.0
+
 
 class TestFaultInjector:
 
@@ -84,6 +104,33 @@ class TestFaultInjector:
         sched = {2: 0, 7: 3}
         assert run(FaultInjector(dict(sched))) == \
             run(FaultInjector(dict(sched))) == [(2, 0), (7, 3)]
+
+    def test_list_schedule_two_failures_same_step(self):
+        """The dict form can hold one failure per step; the list form
+        expresses two, fired one-shot in order across restarts."""
+        inj = FaultInjector(fail_at=[(3, 1), (3, 2), (5, 0)])
+        assert inj.schedule == [(3, 1), (3, 2), (5, 0)]
+        inj.check(2)
+        with pytest.raises(WorkerFailure) as e1:
+            inj.check(3)
+        assert (e1.value.step, e1.value.worker) == (3, 1)
+        with pytest.raises(WorkerFailure) as e2:
+            inj.check(3)                # the restarted run hits step 3 again
+        assert (e2.value.step, e2.value.worker) == (3, 2)
+        inj.check(3)                    # both consumed
+        with pytest.raises(WorkerFailure):
+            inj.check(5)
+        assert inj.schedule == []
+
+    def test_list_schedule_sorted_soonest_first(self):
+        inj = FaultInjector(fail_at=[(7, 0), (2, 3)])
+        assert inj.schedule == [(2, 3), (7, 0)]
+
+    def test_dict_form_still_accepted(self):
+        inj = FaultInjector(fail_at={4: 2})
+        assert inj.schedule == [(4, 2)]
+        with pytest.raises(WorkerFailure):
+            inj.check(4)
 
 
 class TestTrainingRunner:

@@ -142,6 +142,36 @@ class TestDeterminism:
         assert ra.steals == rb.steals
 
 
+class TestReplayAfterWorkerDeath:
+    """release(forget_owner=True) + replay must never touch a dead
+    worker's store (DESIGN.md §10; fault injection itself is pinned in
+    tests/test_fault.py)."""
+
+    def test_replay_reads_nothing_from_dead_worker(self):
+        from repro.runtime.recovery import FaultSchedule, kill
+
+        g, params, a, rc, sched, rep = _weak_scaling_run(
+            4, "parent-worker", n_per=64)
+        want = qt_to_dense(g, rc, params)
+        # mid-run death + lineage recovery on a replay of the multiply
+        nids = sorted(nid for nid in sched.placement
+                      if g.nodes[nid].alias_of is None)
+        sched.replay(g, nids, faults=FaultSchedule(
+            events=[kill(0.5 * rep.makespan, 1)]))
+        assert 1 not in sched.live_workers()
+        # recovery has rebuilt every lost chunk somewhere alive
+        assert all(cid.owner != 1 for cid in sched.placement.values())
+        np.testing.assert_array_equal(qt_to_dense(g, rc, params), want)
+        # a fresh release+replay over the dead-worker pool: no task may
+        # execute on worker 1 and no chunk may be fetched from its store
+        sched.reset_stats()
+        rep2 = sched.replay(g, nids)
+        assert rep2.tasks_per_worker[1] == 0
+        assert all(ev.worker != 1 for ev in rep2.trace.events)
+        assert all(cid.owner != 1 for cid in sched.placement.values())
+        np.testing.assert_array_equal(qt_to_dense(g, rc, params), want)
+
+
 class TestStealAccounting:
     def test_steal_latency_charged(self):
         cheap = CostModel(steal_latency_s=0.0)

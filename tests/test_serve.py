@@ -286,6 +286,20 @@ class TestCacheAccounting:
             c2.put(i, i)
         assert len(c2) == 100 and c2.evictions == 0
 
+    def test_setdefault_refreshes_recency(self):
+        """Regression: setdefault on an existing key used to leave it at
+        its stale slot, so a hot entry re-touched only through setdefault
+        was the first one evicted under cap pressure."""
+        c = LRUCache(cap=2)
+        c.put("hot", 1)
+        c.put("b", 2)
+        assert c.setdefault("hot", 99) == 1     # touch via setdefault only
+        c.put("c", 3)                           # cap pressure evicts LRU
+        assert "hot" in c and "b" not in c
+        assert c.peek("hot") == 1
+        # refresh must not perturb the hit/miss counters
+        assert c.counters()["hits"] == 0 and c.counters()["misses"] == 0
+
 
 class TestTargetedFlush:
     @pytest.mark.pallas
