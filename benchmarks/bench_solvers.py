@@ -1,0 +1,211 @@
+"""Electronic-structure solver sweep: factorization methods + tau chains.
+
+Two sweeps over the solver suite (DESIGN.md §11):
+
+1. **Inverse factorization** — for each SPD decay family (banded / s2 /
+   random) run every ``inverse_factor`` method and record iterations,
+   measured residual, leaf flops, multiply tasks ("touched subtrees")
+   and the task-graph communication demand.  The acceptance contract:
+   every method's Z reproduces the dense reference residual, and the
+   localized method touches fewer subtrees than the global refinement
+   on every decay family.
+
+2. **Accuracy-scaled multiply chains** — sweep the ``TauPolicy`` target
+   over a fixed factor chain and record the per-step taus, the rigorous
+   accumulated bound, measured error, flops and pruned flops.  Contract:
+   measured error <= accumulated bound <= target (when nonzero), and
+   flops are monotone non-increasing as the target loosens.
+
+Emits ``BENCH_solvers.json`` (rendered by ``launch/report.py``);
+``--quick`` runs the CI-sized sweep.
+"""
+import argparse
+import math
+import pathlib
+
+import numpy as np
+
+from repro import Session
+from repro.core import analysis as an
+from repro.core.patterns import (banded_mask, divide_space_order,
+                                 overlap_mask, particle_cloud, random_mask,
+                                 values_for_mask)
+from repro.solvers import TauPolicy, inverse_factor, multiply_chain
+
+try:
+    from benchmarks._artifact import write_artifact
+except ImportError:                     # run directly from benchmarks/
+    from _artifact import write_artifact
+
+METHODS = ("recursive", "localized", "global")
+TARGETS = (0.0, 1e-7, 1e-5, 1e-3, 1e-1)      # exact -> loosest
+TARGETS_QUICK = (0.0, 1e-5, 1e-1)
+
+
+def make_spd(pattern: str, n: int, seed: int = 0) -> np.ndarray:
+    """Diagonally dominant SPD matrix with the named sparsity/decay."""
+    rng = np.random.default_rng(seed)
+    if pattern == "banded":
+        dist = np.abs(np.subtract.outer(np.arange(n), np.arange(n)))
+        a = values_for_mask(banded_mask(n, 8), seed=seed) * 0.5 ** dist
+    elif pattern == "s2":
+        n_per_dim = round(n ** (1.0 / 3.0))
+        while n_per_dim ** 3 > n:
+            n_per_dim -= 1
+        coords = particle_cloud(n_per_dim, 3, seed=seed)
+        order = divide_space_order(coords)
+        mask = overlap_mask(coords, 14.0, order=order)
+        pts = coords[order]
+        dist = np.sqrt(((pts[:, None, :] - pts[None, :, :]) ** 2).sum(-1))
+        a = np.zeros((n, n))
+        m = len(coords)
+        a[:m, :m] = values_for_mask(mask, seed=seed + 1) * np.exp(-0.7 * dist)
+    else:                                              # random decay
+        a = values_for_mask(random_mask(n, 0.15, seed=seed), seed=seed + 1)
+        a *= 10.0 ** (-4.0 * rng.random((n, n)))
+    a = (a + a.T) / 2.0
+    off = np.abs(a).sum(axis=1) - np.abs(np.diag(a))
+    a *= 0.45 / max(off.max(), 1e-12)
+    np.fill_diagonal(a, 1.0)
+    return a
+
+
+def chain_factors(n: int, k: int, seed: int = 3) -> list:
+    """Near-identity decayed factors (keeps chain norms O(1))."""
+    rng = np.random.default_rng(seed)
+    idx = np.arange(n)
+    decay = np.exp(-0.6 * np.abs(idx[:, None] - idx[None, :]))
+    return [np.eye(n) + 0.25 * decay * rng.standard_normal((n, n))
+            for _ in range(k)]
+
+
+def factor_point(pattern: str, method: str, s: np.ndarray, *, leaf_n: int,
+                 bs: int, tol: float, tau: float) -> dict:
+    sess = Session(leaf_n=leaf_n, bs=bs)
+    S = sess.from_dense(s, upper=True)
+    n_before = len(sess.graph.nodes)
+    kw = dict(tol=tol, tau=tau) if method != "recursive" else {}
+    z, rep = inverse_factor(S, method=method, **kw)
+    zd = z.to_dense()
+    n = s.shape[0]
+    measured = float(np.linalg.norm(zd.T @ s @ zd - np.eye(n)))
+    return {
+        "pattern": pattern, "method": method, "n": n,
+        "iterations": rep.iterations, "splits": rep.splits,
+        "residual": rep.residual, "measured_residual": measured,
+        "converged": rep.converged, "flops": rep.flops,
+        "multiply_tasks": rep.multiply_tasks,
+        "comm_demand_bytes": an.task_comm_demand(sess.graph, n_before),
+    }
+
+
+def chain_point(target: float, mats: list, exact: np.ndarray, *,
+                leaf_n: int, bs: int) -> dict:
+    sess = Session(leaf_n=leaf_n, bs=bs)
+    ms = [sess.from_dense(m) for m in mats]
+    n_before = len(sess.graph.nodes)
+    policy = TauPolicy(target=target) if target > 0.0 else None
+    p, rep = multiply_chain(ms, policy=policy)
+    err = float(np.linalg.norm(p.to_dense() - exact))
+    return {
+        "target": target, "steps": rep.steps, "taus": rep.taus,
+        "accumulated_bound": rep.accumulated_bound,
+        "measured_error": err, "flops": rep.flops,
+        "pruned_flops": rep.pruned_flops,
+        "comm_demand_bytes": an.task_comm_demand(sess.graph, n_before),
+    }
+
+
+def check_factors(rows: list) -> None:
+    for r in rows:
+        # the reported residual is itself a measurement; it must agree
+        # with the dense readback up to leaf float accumulation
+        assert r["measured_residual"] <= r["residual"] + 1e-9, (
+            f"{r['pattern']}/{r['method']}: dense residual "
+            f"{r['measured_residual']} exceeds reported {r['residual']}")
+        assert r["converged"], f"{r['pattern']}/{r['method']} diverged"
+    by = {(r["pattern"], r["method"]): r for r in rows}
+    for pattern in {r["pattern"] for r in rows}:
+        loc, glo = by[(pattern, "localized")], by[(pattern, "global")]
+        assert loc["multiply_tasks"] < glo["multiply_tasks"], (
+            f"{pattern}: localized touched {loc['multiply_tasks']} "
+            f"subtrees, global only {glo['multiply_tasks']}")
+
+
+def check_chain(rows: list, mats: list) -> None:
+    slack = 1e-9 * math.prod(float(np.linalg.norm(m)) for m in mats)
+    for r in rows:
+        assert r["measured_error"] <= r["accumulated_bound"] + slack, (
+            f"target={r['target']}: error {r['measured_error']} > "
+            f"bound {r['accumulated_bound']}")
+        if r["target"] > 0.0:
+            assert r["accumulated_bound"] <= r["target"], (
+                f"target={r['target']}: accumulated bound "
+                f"{r['accumulated_bound']} overran the target")
+    # rows are swept from exact to loosest: pruning only grows
+    flops = [r["flops"] for r in rows]
+    assert an.is_monotone_nonincreasing(flops), \
+        f"chain flops not monotone in target: {flops}"
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true",
+                    help="reduced sweep (CI / perf trajectory)")
+    ap.add_argument("--out", type=pathlib.Path, default=None,
+                    help="write JSON record to this path")
+    ap.add_argument("--patterns", nargs="+",
+                    default=["banded", "s2", "random"],
+                    choices=["banded", "s2", "random"])
+    args = ap.parse_args()
+
+    n, leaf_n, bs = (64, 16, 4) if args.quick else (128, 16, 4)
+    tol, tau = 1e-4, 1e-7          # refinement exit / truncation threshold
+
+    print("pattern,method,iters,residual,flops,multiply_tasks,comm_B")
+    factor_rows = []
+    for pattern in args.patterns:
+        s = make_spd(pattern, n)
+        for method in METHODS:
+            r = factor_point(pattern, method, s, leaf_n=leaf_n, bs=bs,
+                             tol=tol, tau=tau)
+            factor_rows.append(r)
+            print(f"{pattern},{method},{r['iterations']},"
+                  f"{r['residual']:.3e},{r['flops']:.4g},"
+                  f"{r['multiply_tasks']},{r['comm_demand_bytes']}",
+                  flush=True)
+    check_factors(factor_rows)
+
+    targets = TARGETS_QUICK if args.quick else TARGETS
+    mats = chain_factors(n, k=3 if args.quick else 4)
+    exact = mats[0]
+    for m in mats[1:]:
+        exact = exact @ m
+    print("target,steps,bound,error,flops,pruned_flops")
+    chain_rows = []
+    for target in targets:
+        r = chain_point(target, mats, exact, leaf_n=leaf_n, bs=bs)
+        chain_rows.append(r)
+        print(f"{target:g},{r['steps']},{r['accumulated_bound']:.3e},"
+              f"{r['measured_error']:.3e},{r['flops']:.4g},"
+              f"{r['pruned_flops']:.4g}", flush=True)
+    check_chain(chain_rows, mats)
+
+    if args.out:
+        write_artifact(
+            args.out, "solvers",
+            {"quick": args.quick, "factor_rows": factor_rows,
+             "chain_rows": chain_rows,
+             "asserts": {"residual_matches_dense": True,
+                         "localized_lt_global_tasks": True,
+                         "error_le_accumulated_bound": True,
+                         "bound_le_target": True,
+                         "chain_flops_monotone": True}},
+            params={"quick": args.quick, "n": n, "leaf_n": leaf_n, "bs": bs,
+                    "tol": tol, "tau": tau, "targets": list(targets),
+                    "patterns": args.patterns})
+        print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

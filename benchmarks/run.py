@@ -42,6 +42,8 @@ BENCHES = [
      "plan serving: req/s vs coalesced batch size, p50/p95/p99, hit rate"),
     ("bench_fault", ["--out", "BENCH_fault.json"],
      "fault recovery: failure rate x policy, lineage beats full re-run"),
+    ("bench_solvers", ["--out", "BENCH_solvers.json"],
+     "solver suite: factorization methods + accuracy-scaled tau chains"),
 ]
 
 QUICK = [
@@ -60,6 +62,8 @@ QUICK = [
      "quick serving sweep (hit rate, coalesced throughput, tail latency)"),
     ("bench_fault", ["--quick", "--out", "BENCH_fault.json"],
      "quick fault-recovery sweep (degradation + recompute-subset guards)"),
+    ("bench_solvers", ["--quick", "--out", "BENCH_solvers.json"],
+     "quick solver sweep (factor-method + chain-target guards)"),
 ]
 
 
@@ -67,10 +71,22 @@ def main() -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--quick", action="store_true",
                     help="only the reduced simulator sweep (CI-sized)")
+    ap.add_argument("--only", action="append", default=None,
+                    metavar="BENCH",
+                    help="run only the named benchmark(s); repeatable, "
+                         "matches with or without the bench_ prefix")
     args = ap.parse_args()
 
     root = pathlib.Path(__file__).parents[1]
     benches = QUICK if args.quick else BENCHES
+    if args.only:
+        wanted = {w if w.startswith("bench_") else f"bench_{w}"
+                  for w in args.only}
+        unknown = wanted - {name for name, _, _ in benches}
+        if unknown:
+            ap.error(f"unknown benchmark(s) {sorted(unknown)}; choose from "
+                     f"{sorted(name for name, _, _ in benches)}")
+        benches = [b for b in benches if b[0] in wanted]
     failures = []
     for name, extra, desc in benches:
         print(f"\n=== {name} — {desc} ===", flush=True)

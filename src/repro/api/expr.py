@@ -41,8 +41,8 @@ import dataclasses
 from typing import Optional
 
 __all__ = ["Expr", "Input", "Transpose", "Scale", "Add", "MatMul",
-           "SymSquare", "Syrk", "SymMul", "rewrite", "expr_upper",
-           "expr_inputs", "fingerprint"]
+           "SymSquare", "Syrk", "SymMul", "InvChol", "TriSolve", "rewrite",
+           "expr_upper", "expr_inputs", "fingerprint"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -106,13 +106,30 @@ class SymMul(Expr):
     side: str = "left"
 
 
+@dataclasses.dataclass(frozen=True)
+class InvChol(Expr):
+    """Inverse Cholesky factor Z of an SPD operand: Z^T a Z = I.
+
+    ``a`` must lower to symmetric upper storage; the result is upper
+    *triangular* in plain storage (strictly-lower quadrant NIL).
+    """
+    a: Expr
+
+
+@dataclasses.dataclass(frozen=True)
+class TriSolve(Expr):
+    """X = r^{-1} b with r upper triangular (plain storage)."""
+    r: Expr
+    b: Expr
+
+
 def expr_upper(e: Expr) -> bool:
     """Whether an expression's result uses symmetric upper storage."""
     if isinstance(e, Input):
         return e.upper
     if isinstance(e, (SymSquare, Syrk)):
         return True
-    if isinstance(e, (MatMul, SymMul)):
+    if isinstance(e, (MatMul, SymMul, InvChol, TriSolve)):
         return False
     if isinstance(e, Transpose):
         return expr_upper(e.a)
@@ -146,6 +163,11 @@ def expr_inputs(e: Expr) -> list:
             walk(x.a)
         elif isinstance(x, SymMul):
             walk(x.s)
+            walk(x.b)
+        elif isinstance(x, InvChol):
+            walk(x.a)
+        elif isinstance(x, TriSolve):
+            walk(x.r)
             walk(x.b)
         else:
             raise TypeError(f"not an Expr: {x!r}")
@@ -216,6 +238,10 @@ def rewrite(e: Expr) -> Expr:
         return Syrk(a, trans=trans)
     if isinstance(e, SymMul):
         return SymMul(rewrite(e.s), rewrite(e.b), e.side)
+    if isinstance(e, InvChol):
+        return InvChol(rewrite(e.a))
+    if isinstance(e, TriSolve):
+        return TriSolve(rewrite(e.r), rewrite(e.b))
     raise TypeError(f"not an Expr: {e!r}")
 
 
@@ -306,6 +332,16 @@ def fingerprint(e: Expr, structure_of, params) -> tuple[str, list]:
         elif isinstance(x, SymMul):
             toks.append(f"sm[{x.side}](")
             walk(x.s)
+            toks.append(",")
+            walk(x.b)
+            toks.append(")")
+        elif isinstance(x, InvChol):
+            toks.append("ic(")
+            walk(x.a)
+            toks.append(")")
+        elif isinstance(x, TriSolve):
+            toks.append("ts(")
+            walk(x.r)
             toks.append(",")
             walk(x.b)
             toks.append(")")

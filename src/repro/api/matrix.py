@@ -42,11 +42,11 @@ from typing import Optional
 import numpy as np
 
 from repro.core.multiply import TruncationReport
-from repro.core.quadtree import (QTParams, qt_frob2, qt_norm2, qt_stats,
-                                 qt_to_dense, qt_trace)
+from repro.core.quadtree import (QTParams, qt_extract, qt_frob2, qt_norm2,
+                                 qt_stats, qt_to_dense, qt_trace)
 
-from .expr import (Add, Expr, Input, MatMul, Scale, SymMul, SymSquare,
-                   Syrk, Transpose, expr_upper)
+from .expr import (Add, Expr, Input, InvChol, MatMul, Scale, SymMul,
+                   SymSquare, Syrk, Transpose, TriSolve, expr_upper)
 
 _SYM_TAU_ERROR = (
     "{op}: the symmetric task programs are untruncated, but the effective "
@@ -264,6 +264,49 @@ class Matrix:
         self._check_sym_tau(tau, "sym_multiply")
         return self._result(
             SymMul(self._as_expr(), other._as_expr(), side))
+
+    # -- triangular algebra (solver-suite task programs) ---------------------
+    def inv_chol(self) -> "Matrix":
+        """Z with ``Z^T S Z = I`` — the recursive inverse Cholesky factor
+        of an SPD matrix in symmetric upper storage (arXiv:1901.07993).
+        The result is upper triangular in *plain* storage (strictly-lower
+        quadrants NIL at every level); raises on a NIL (singular) input.
+        """
+        if not self.upper:
+            raise ValueError("inv_chol needs symmetric upper storage: "
+                             "build with from_dense(..., upper=True)")
+        return self._result(InvChol(self._as_expr()))
+
+    def tri_solve(self, b: "Matrix") -> "Matrix":
+        """X = R^{-1} B with self an upper-triangular R in plain storage
+        (e.g. a Cholesky factor); recursive back substitution."""
+        self._check(b, "tri_solve")
+        if self.upper or b.upper:
+            raise ValueError("tri_solve: both operands must use plain "
+                             "storage (R upper triangular, B general)")
+        if self._t:
+            raise ValueError("tri_solve: transposed R is not supported "
+                             "(the recursion needs upper-triangular R)")
+        return self._result(TriSolve(self._as_expr(), b._as_expr()))
+
+    def principal_submatrix(self, path) -> "Matrix":
+        """The principal submatrix at a quadrant ``path`` (sequence of
+        indices 0..3 descending the quadtree), as a new Matrix over the
+        smaller parameter set.  The extraction is a single alias task —
+        subtree chunks (and their cached norms) are shared, not copied.
+        Only the two diagonal quadrants (0 and 3) of a symmetric
+        upper-storage matrix are themselves principal submatrices."""
+        self._ensure()
+        if self._t:
+            raise ValueError("principal_submatrix: resolve the transpose "
+                             "first (extract from the untransposed handle)")
+        if self.upper and any(q not in (0, 3) for q in path):
+            raise ValueError(
+                "principal_submatrix: symmetric upper storage only has "
+                "principal submatrices along the diagonal (quadrants 0/3)")
+        nid, sub = qt_extract(self.session.graph, self.params, self.node,
+                              path)
+        return Matrix(self.session, nid, sub, upper=self.upper)
 
     def _check_sym_tau(self, tau: Optional[float], op: str) -> None:
         eff = float(self.session.tau if tau is None else tau)

@@ -45,10 +45,11 @@ from repro.core.multiply import (TruncationReport, qt_add, qt_multiply,
                                  qt_sym_square, qt_syrk, qt_transpose)
 from repro.core.quadtree import (PlanStructureError, qt_invalidate_caches,
                                  qt_rebind_dense, qt_rebind_from)
+from repro.core.triangular import qt_inv_chol, qt_tri_solve
 from repro.obs.metrics import from_engine_stats, from_truncation
 
-from .expr import (Add, Expr, Input, MatMul, Scale, SymMul, SymSquare,
-                   Syrk, Transpose)
+from .expr import (Add, Expr, Input, InvChol, MatMul, Scale, SymMul,
+                   SymSquare, Syrk, Transpose, TriSolve)
 from .lru import LRUCache
 
 __all__ = ["Plan", "PlanStructureError", "lower"]
@@ -109,6 +110,10 @@ def lower(session, expr: Expr, params, reports: list,
             nid = qt_syrk(g, params, go(e.a), trans=e.trans)
         elif isinstance(e, SymMul):
             nid = qt_sym_multiply(g, params, go(e.s), go(e.b), side=e.side)
+        elif isinstance(e, InvChol):
+            nid = qt_inv_chol(g, params, go(e.a))
+        elif isinstance(e, TriSolve):
+            nid = qt_tri_solve(g, params, go(e.r), go(e.b))
         else:
             raise TypeError(f"not an Expr: {e!r}")
         memo[e] = nid
@@ -154,6 +159,11 @@ class Plan:
         # (LRU-bounded — unbounded growth was a leak under serving
         # traffic; evictions roll up into Session.metrics())
         self._recompiled: LRUCache = LRUCache(cap=RECOMPILED_CAP)
+        # successor reuse counters (Session.metrics() "plan-recompile"):
+        # a hit is a structure-mismatch run served by an already-compiled
+        # successor's zero-task replay; a miss had to compile fresh
+        self._succ_hits = 0
+        self._succ_misses = 0
 
     def __repr__(self) -> str:
         state = (f"tasks={len(self.nodes)}" if self.nodes is not None
@@ -259,9 +269,12 @@ class Plan:
         # a new plan per call)
         for succ in list(self._recompiled.values()):
             try:
-                return succ._run(by_slot, flush=flush)
+                out = succ._run(by_slot, flush=flush)
+                self._succ_hits += 1
+                return out
             except PlanStructureError:
                 continue
+        self._succ_misses += 1
         subst: dict = {}
         for slot, value in by_slot.items():
             if value is None:
@@ -490,6 +503,11 @@ def _substitute_inputs(e: Expr, subst: dict) -> Expr:
     if isinstance(e, SymMul):
         return SymMul(_substitute_inputs(e.s, subst),
                       _substitute_inputs(e.b, subst), e.side)
+    if isinstance(e, InvChol):
+        return InvChol(_substitute_inputs(e.a, subst))
+    if isinstance(e, TriSolve):
+        return TriSolve(_substitute_inputs(e.r, subst),
+                        _substitute_inputs(e.b, subst))
     raise TypeError(f"not an Expr: {e!r}")
 
 

@@ -549,6 +549,9 @@ class Session:
         pc = self._plan_cache_metrics()
         if pc is not None:
             out.append(pc)
+        pr = self._plan_recompile_metrics()
+        if pr is not None:
+            out.append(pr)
         return out
 
     def _plan_cache_metrics(self) -> Optional[MetricSet]:
@@ -570,6 +573,24 @@ class Session:
         ms = MetricSet(source="plan-cache")
         for k in ("hits", "misses", "evictions", "size"):
             ms.add(f"plan_cache_{k}", "count", [c[k]])
+        return ms
+
+    def _plan_recompile_metrics(self) -> Optional[MetricSet]:
+        """Recompile-successor counters, or None while nothing recompiled.
+
+        Changing-sparsity iterations run through
+        ``plan.run(recompile=True)``: a *hit* is a structure-mismatch
+        run served by an already-compiled successor's zero-task replay,
+        a *miss* had to compile a fresh plan.  Mirrors the "plan-cache"
+        source so drifting-structure chains are observable per session.
+        """
+        hits = sum(p._succ_hits for p in self._plans.values())
+        misses = sum(p._succ_misses for p in self._plans.values())
+        if hits + misses == 0:
+            return None
+        ms = MetricSet(source="plan-recompile")
+        ms.add("plan_recompile_hits", "count", [hits])
+        ms.add("plan_recompile_misses", "count", [misses])
         return ms
 
 

@@ -46,14 +46,19 @@ from typing import Any, Optional
 
 import numpy as np
 
-from .leaf import (LeafMatrix, LeafStats, alloc_structure, leaf_add,
-                   leaf_multiply, leaf_scale, leaf_sym_multiply,
-                   leaf_sym_square, leaf_syrk, unpack_blocks)
+from .leaf import (LeafMatrix, LeafStats, alloc_structure, inv_chol_keys,
+                   leaf_add, leaf_inv_chol, leaf_multiply, leaf_scale,
+                   leaf_sym_multiply, leaf_sym_square, leaf_syrk,
+                   leaf_tri_solve, tri_solve_keys, unpack_blocks)
 from .quadtree import MatrixChunk
 from repro.obs.tracer import NOOP
 
 #: leaf-payload kinds executed host-side (no kernel wave)
 HOST_KINDS = ("add", "transpose", "scale")
+
+#: leaf-payload kinds dispatched through the batched triangular kernels
+#: (kernels/tri.py) — their own wave family, never mixed into GEMM waves
+SOLVE_KINDS = ("tri_solve", "inv_chol")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -64,7 +69,9 @@ class LeafPayload:
     engine resolves them to chunks at execution time.  Only the fields
     relevant to ``kind`` are meaningful.
     """
-    kind: str       # multiply|sym_square|syrk|sym_multiply|add|transpose|scale
+    # multiply|sym_square|syrk|sym_multiply|add|transpose|scale
+    # |tri_solve|inv_chol
+    kind: str
     a: Optional[int] = None
     b: Optional[int] = None
     ta: bool = False                # multiply: transpose A
@@ -332,6 +339,12 @@ class NumpyEngine(LeafEngine):
         elif k == "scale":
             res = leaf_scale(av.leaf, payload.alpha)
             upper = av.upper
+        elif k == "inv_chol":
+            res = leaf_inv_chol(av.leaf, stats=st)
+            upper = False
+        elif k == "tri_solve":
+            res = leaf_tri_solve(av.leaf, bv.leaf, stats=st)
+            upper = False
         else:
             raise ValueError(f"unknown leaf payload kind: {k}")
         return res, upper
@@ -345,9 +358,11 @@ class NumpyEngine(LeafEngine):
         node.flops = st.flops
         # multiply kinds prune structurally-empty results to NIL; adds of
         # two non-NIL leaves always produce a chunk (Alg 2 semantics) —
-        # matching the pallas backend's structural behavior exactly
-        if payload.kind not in ("add", "transpose", "scale") \
-                and res.is_zero():
+        # matching the pallas backend's structural behavior exactly.
+        # Solve kinds always produce a chunk: their structure is the
+        # deterministic inv_chol_keys/tri_solve_keys set, never empty.
+        if payload.kind not in HOST_KINDS \
+                and payload.kind not in SOLVE_KINDS and res.is_zero():
             return None
         return MatrixChunk(av.n, leaf=res, upper=upper)
 
@@ -473,6 +488,21 @@ class PallasEngine(LeafEngine):
                                   upper=a_leaf.upper, dtype=a_leaf.dtype)
             self._defer(_Pending(node.nid, payload, out, a_leaf, None))
             return MatrixChunk(av.n, leaf=out, upper=av.upper)
+
+        if payload.kind in SOLVE_KINDS:
+            # structure is a function of the operand structure alone
+            # (deterministic keys, zero blocks kept — see core/leaf.py),
+            # so deferral is safe exactly like the multiply kinds; the
+            # numeric fill joins a batched triangular wave at flush
+            if payload.kind == "inv_chol":
+                keys = inv_chol_keys(a_leaf.grid)
+            else:
+                keys = tri_solve_keys(b_leaf.blocks, a_leaf.grid)
+            node.flops = float(a_leaf.n) ** 3
+            out = alloc_structure(a_leaf.n, a_leaf.bs, keys, upper=False,
+                                  dtype=self._out_dtype(a_leaf, b_leaf))
+            self._defer(_Pending(node.nid, payload, out, a_leaf, b_leaf))
+            return MatrixChunk(av.n, leaf=out, upper=False)
 
         pairs, upper = leaf_task_pairs(payload, a_leaf, b_leaf)
         if payload.tau > 0.0:
@@ -615,9 +645,43 @@ class PallasEngine(LeafEngine):
         """
         groups: dict[tuple, list[_Pending]] = {}
         for t in self._pending:
-            if t.payload.kind not in HOST_KINDS and self._ready(t):
+            if t.payload.kind not in HOST_KINDS \
+                    and t.payload.kind not in SOLVE_KINDS \
+                    and self._ready(t):
                 groups.setdefault(self.batch_key(t), []).append(t)
         return groups
+
+    def solve_wave(self) -> dict:
+        """Ready deferred triangular-solve tasks, grouped for batching.
+
+        Solve kinds never join GEMM waves: they dispatch through
+        kernels/tri.py one batched call per ``(kind, leaf_n, bs)`` group.
+        """
+        groups: dict[tuple, list[_Pending]] = {}
+        for t in self._pending:
+            if t.payload.kind in SOLVE_KINDS and self._ready(t):
+                key = (t.payload.kind, t.out.n, t.out.bs)
+                groups.setdefault(key, []).append(t)
+        return groups
+
+    def run_solve_ready(self) -> bool:
+        """Dispatch every ready batched triangular wave; True if any ran."""
+        progressed = False
+        for key, tasks in sorted(self.solve_wave().items()):
+            kind, n, bs = key
+            tr = self.tracer
+            if tr.enabled:
+                with tr.span("engine.wave", track="engine") as sp:
+                    self._waves.append(dispatch_solve_wave(
+                        tasks, kind=kind, n=n, bs=bs))
+                    sp.set(**self._wave_span_attrs())
+            else:
+                self._waves.append(dispatch_solve_wave(
+                    tasks, kind=kind, n=n, bs=bs))
+            self._waves[-1].setdefault("batch_key", list(key))
+            self.commit_tasks(tasks)
+            progressed = True
+        return progressed
 
     def run_host_ready(self) -> bool:
         """Execute every ready host-side fill (add/transpose/scale).
@@ -669,6 +733,7 @@ class PallasEngine(LeafEngine):
                 self._run_wave(groups)   # commits per group (see below)
             progressed = bool(groups)
             progressed |= self.run_host_ready()
+            progressed |= self.run_solve_ready()
             if self._pending and not progressed:
                 raise RuntimeError(
                     "leaf engine deadlock: unresolvable leaf dependencies")
@@ -710,7 +775,9 @@ class PallasEngine(LeafEngine):
         a_leaf = av.leaf
         b_leaf = bv.leaf if bv is not None else None
         out: MatrixChunk = g.value_of(node.nid)
-        if payload.kind in ("add", "transpose", "scale"):
+        if payload.kind in HOST_KINDS or payload.kind in SOLVE_KINDS:
+            # host fills and solve waves assign (not scatter-add) every
+            # output block, so re-deferring without zeroing is exact
             self._defer(_Pending(node.nid, payload, out.leaf, a_leaf,
                                  b_leaf))
         else:
@@ -768,6 +835,49 @@ class PallasEngine(LeafEngine):
             "bytes_packed": sum(w["bytes_packed"] for w in self._waves),
             "wave_log": list(self._waves),
         }
+
+
+def dispatch_solve_wave(tasks: list[_Pending], *, kind: str, n: int,
+                        bs: int) -> dict:
+    """One batched triangular-kernel call for every ready solve leaf.
+
+    Leaves are densified host-side (symmetric upper storage expands to
+    full), stacked ``(P, n, n)`` in float32, run through
+    :mod:`repro.kernels.tri`, and scattered back into each task's
+    pre-allocated deterministic block structure.  Returns a wave record
+    with the same accounting fields as the GEMM waves (``pairs`` counts
+    leaves here — one "pair" of dense operands per task).
+    """
+    import jax.numpy as jnp
+    from repro.kernels import tri as ktri
+
+    a_pack = np.stack([t.a_leaf.to_dense() for t in tasks]).astype(np.float32)
+    t0 = time.perf_counter()
+    if kind == "inv_chol":
+        res = np.asarray(ktri.batched_inv_chol(jnp.asarray(a_pack)))
+        b_bytes = 0
+    else:
+        b_pack = np.stack([t.b_leaf.to_dense()
+                           for t in tasks]).astype(np.float32)
+        res = np.asarray(ktri.batched_tri_solve(
+            jnp.asarray(a_pack), jnp.asarray(b_pack)))
+        b_bytes = b_pack.nbytes
+    wall = time.perf_counter() - t0
+
+    c_blocks = 0
+    for t, x in zip(tasks, res):
+        keys = list(t.out.blocks)
+        data = np.stack([np.ascontiguousarray(
+            x[i * bs:(i + 1) * bs, j * bs:(j + 1) * bs]) for i, j in keys])
+        unpack_blocks(t.out, keys, data)
+        c_blocks += len(keys)
+    return {
+        "kernel": kind, "bs": bs, "tasks": len(tasks),
+        "pairs": len(tasks), "padded_pairs": len(tasks),
+        "c_blocks": int(c_blocks), "wall_s": wall,
+        "bytes_packed": int(a_pack.nbytes + b_bytes
+                            + res.astype(np.float32).nbytes),
+    }
 
 
 def dispatch_packed_wave(tasks: list[_Pending], bs: int, *, kernel: str,

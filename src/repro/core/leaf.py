@@ -422,6 +422,78 @@ def leaf_scale(a: LeafMatrix, alpha: float) -> LeafMatrix:
     return out
 
 
+def inv_chol_keys(grid: int) -> list[tuple[int, int]]:
+    """Deterministic block structure of a leaf inverse Cholesky factor.
+
+    The inverse factor of a dense-diagonal SPD leaf has a full upper
+    triangle in general; emitting every i <= j block (zeros included)
+    regardless of the numeric values keeps the structure a function of
+    the *input structure* only, so the numpy and Pallas engines build
+    identical chunk trees (Plan fingerprints and rebinding rely on that).
+    """
+    return [(i, j) for i in range(grid) for j in range(i, grid)]
+
+
+def tri_solve_keys(b_keys: Iterable[tuple[int, int]], grid: int
+                   ) -> list[tuple[int, int]]:
+    """Deterministic block structure of X = R^{-1} B, R upper triangular.
+
+    Back substitution propagates block (k, j) of B upward into rows
+    i <= k of X, so column j of X occupies rows 0..max_k(k, j in B).
+    Like :func:`inv_chol_keys` this depends only on B's structure —
+    identical across engines by construction.
+    """
+    top: dict[int, int] = {}
+    for (k, j) in b_keys:
+        top[j] = max(top.get(j, -1), k)
+    return sorted((i, j) for j, kmax in top.items() for i in range(kmax + 1))
+
+
+def leaf_inv_chol(s: LeafMatrix, stats: Optional[LeafStats] = None
+                  ) -> LeafMatrix:
+    """Z = inv(U) for S = U^T U: the leaf-level inverse Cholesky factor.
+
+    ``s`` is an SPD leaf in symmetric upper block storage; the result is
+    upper triangular in *plain* storage with the deterministic
+    :func:`inv_chol_keys` structure (zero blocks kept — see there).
+    """
+    assert s.upper
+    sd = s.to_dense()
+    u = np.linalg.cholesky(sd).T                    # S = U^T U, U upper
+    z = np.linalg.solve(u, np.eye(s.n, dtype=sd.dtype))
+    bs = s.bs
+    out = LeafMatrix(s.n, bs, dtype=sd.dtype)
+    for (i, j) in inv_chol_keys(s.grid):
+        out.blocks[(i, j)] = np.ascontiguousarray(
+            z[i * bs:(i + 1) * bs, j * bs:(j + 1) * bs])
+    if stats is not None:
+        stats.flops += float(s.n) ** 3              # ~n^3/3 chol + ~2n^3/3 inv
+        stats.batches += 1
+    return out
+
+
+def leaf_tri_solve(r: LeafMatrix, b: LeafMatrix,
+                   stats: Optional[LeafStats] = None) -> LeafMatrix:
+    """X = R^{-1} B with R upper triangular (plain storage), leaf level.
+
+    Output structure is the deterministic :func:`tri_solve_keys` set
+    (zero blocks kept), so both engines agree block-for-block.
+    """
+    assert not r.upper and not b.upper and r.n == b.n and r.bs == b.bs
+    rd = r.to_dense()
+    bd = b.to_dense()
+    x = np.linalg.solve(rd, bd)
+    bs = r.bs
+    out = LeafMatrix(r.n, bs, dtype=np.result_type(rd.dtype, bd.dtype))
+    for (i, j) in tri_solve_keys(b.blocks, r.grid):
+        out.blocks[(i, j)] = np.ascontiguousarray(
+            x[i * bs:(i + 1) * bs, j * bs:(j + 1) * bs])
+    if stats is not None:
+        stats.flops += float(r.n) ** 2 * b.grid * b.bs
+        stats.batches += 1
+    return out
+
+
 def leaf_truncate(a: LeafMatrix, tau_frob: float) -> LeafMatrix:
     """Drop smallest blocks while ||dropped||_F <= tau (paper §6.2 truncation)."""
     items = sorted(a.blocks.items(), key=lambda kv: (kv[1] ** 2).sum())

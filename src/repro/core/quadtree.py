@@ -21,7 +21,7 @@ import numpy as np
 
 from .chunks import Chunk
 from .leaf import LeafMatrix
-from .tasks import CTGraph, Dep
+from .tasks import Alias, CTGraph, Dep
 
 
 @dataclasses.dataclass(frozen=True)
@@ -236,6 +236,57 @@ def qt_from_coo(g: CTGraph, rows: np.ndarray, cols: np.ndarray,
             sp.set(tasks=len(g.nodes) - n0, nil=nid is None)
         return nid
     return build(np.asarray(rows), np.asarray(cols), params.n, 0, 0, upper)
+
+
+def qt_extract(g: CTGraph, params: QTParams, a: Optional[int],
+               path) -> tuple[Optional[int], QTParams]:
+    """Principal-submatrix extraction: descend a quadrant path (§3.1).
+
+    ``path`` is a sequence of child indices (0..3, row-major: 0 and 3 are
+    the diagonal quadrants) naming the subtree to extract; each step
+    halves the dimension.  Returns ``(nid, sub_params)`` where ``nid``
+    aliases the existing child chunk — chunks are immutable and carry
+    their own dimension (no global offsets, §3.1), so a subtree *is* a
+    complete matrix of the smaller dimension as-is, and its cached
+    norm2/trace values (and those of everything below it) carry over
+    untouched rather than being recomputed.
+
+    The localized inverse-factorization solver (arXiv:1901.07993) builds
+    on this: principal submatrices of the overlap matrix are factorized
+    independently and refined, touching only local subtrees.
+    """
+    path = tuple(path)
+    n = params.n
+    for idx in path:
+        if idx not in (0, 1, 2, 3):
+            raise ValueError(f"qt_extract: bad quadrant index {idx!r}")
+        if n <= params.leaf_n:
+            raise ValueError(
+                "qt_extract: path descends below the leaf level "
+                f"(n={n}, leaf_n={params.leaf_n})")
+        n //= 2
+    sub_params = QTParams(n, params.leaf_n, params.bs)
+    if not path:
+        return a, sub_params            # identity extraction
+    if g.value_of(a) is None:
+        return None, sub_params         # every subtree of NIL is NIL
+
+    def fn(_: object) -> Alias:
+        nid = a
+        for idx in path:
+            chunk: Optional[MatrixChunk] = g.value_of(nid)
+            if chunk is None:
+                return Alias(None)
+            assert not chunk.is_leaf, "qt_extract: hit a leaf mid-path"
+            nid = chunk.children[idx]
+        return Alias(nid)
+
+    # fetch=False: extraction routes identifiers, it never reads leaf data
+    out = g.register_task("extract", fn, [Dep(a, fetch=False)])
+    g.nodes[out].level = len(path)
+    if g.value_of(out) is None:
+        return None, sub_params
+    return out, sub_params
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,74 @@
+"""Batched dense triangular ops for the solver leaf payloads.
+
+The solver task programs (:mod:`repro.core.triangular`) bottom out in two
+leaf payload kinds — ``inv_chol`` (Z = U^{-1} for S = U^T U, the leaf
+inverse Cholesky) and ``tri_solve`` (X = R^{-1} B with R upper
+triangular).  The deferred Pallas engine batches every ready solve leaf
+of one shape into a single call here, exactly like GEMM waves batch
+through :func:`repro.kernels.ops.batched_gemm`.
+
+Unlike the GEMM path there is no hand-written Pallas kernel body:
+``cholesky`` and ``triangular_solve`` are XLA-native primitives with
+accelerator lowerings (MXU-backed on TPU), so the batched wrappers here
+*are* the accelerator path — a custom kernel would only re-derive what
+XLA already emits for these small fixed-size factorizations.  The
+``use_pallas``/``interpret`` keywords are accepted for signature parity
+with :mod:`repro.kernels.ops` and ignored.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["batched_inv_chol", "batched_tri_solve", "batched_tri_inv"]
+
+
+@partial(jax.jit, static_argnames=("lower",))
+def _tri_inv(r: jax.Array, lower: bool) -> jax.Array:
+    eye = jnp.broadcast_to(jnp.eye(r.shape[-1], dtype=r.dtype), r.shape)
+    return jax.lax.linalg.triangular_solve(
+        r, eye, left_side=True, lower=lower)
+
+
+def batched_tri_inv(r: jax.Array, *, lower: bool = False,
+                    use_pallas: Optional[bool] = None,
+                    interpret: Optional[bool] = None) -> jax.Array:
+    """inv(R[p]) for a stack of triangular matrices; (P, n, n) -> same."""
+    del use_pallas, interpret
+    return _tri_inv(r, lower)
+
+
+@jax.jit
+def _inv_chol(s: jax.Array) -> jax.Array:
+    l = jnp.linalg.cholesky(s)          # S = L L^T, L lower
+    u = jnp.swapaxes(l, -1, -2)         # S = U^T U, U upper
+    return _tri_inv(u, False)
+
+
+def batched_inv_chol(s: jax.Array, *,
+                     use_pallas: Optional[bool] = None,
+                     interpret: Optional[bool] = None) -> jax.Array:
+    """Z[p] = inv(chol_upper(S[p])): upper triangular, Z^T S Z = I.
+
+    ``S`` is a (P, n, n) stack of dense symmetric positive-definite
+    leaves (full storage — callers expand symmetric upper storage first).
+    """
+    del use_pallas, interpret
+    return _inv_chol(s)
+
+
+@partial(jax.jit, static_argnames=("lower",))
+def _tri_solve(r: jax.Array, b: jax.Array, lower: bool) -> jax.Array:
+    return jax.lax.linalg.triangular_solve(
+        r, b, left_side=True, lower=lower)
+
+
+def batched_tri_solve(r: jax.Array, b: jax.Array, *, lower: bool = False,
+                      use_pallas: Optional[bool] = None,
+                      interpret: Optional[bool] = None) -> jax.Array:
+    """X[p] = inv(R[p]) @ B[p] with R triangular; both (P, n, n)."""
+    del use_pallas, interpret
+    return _tri_solve(r, b, lower)

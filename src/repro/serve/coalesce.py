@@ -76,6 +76,9 @@ class WaveCoalescer:
             for g, eng in mergeable:
                 eng._bind(g)
                 progressed |= eng.run_host_ready()
+                # solve waves (triangular kinds) stay per-engine: they
+                # dispatch dense stacked leaves, not GEMM pair streams
+                progressed |= eng.run_solve_ready()
             merged: dict = {}
             for _, eng in mergeable:
                 for key, tasks in eng.ready_wave().items():

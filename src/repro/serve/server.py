@@ -68,10 +68,11 @@ class AdmissionError(RuntimeError):
 
 @dataclasses.dataclass(frozen=True)
 class Request:
-    """One unit of client work; build via :meth:`multiply` / :meth:`sp2`."""
-    kind: str                       # "multiply" | "sp2"
-    a: str = ""                     # multiply: left operand name
-    b: str = ""                     # multiply: right operand name
+    """One unit of client work; build via :meth:`multiply` / :meth:`sp2` /
+    :meth:`congruence`."""
+    kind: str                       # "multiply" | "sp2" | "congruence"
+    a: str = ""                     # multiply/congruence: left operand name
+    b: str = ""                     # multiply/congruence: right operand name
     x0: str = ""                    # sp2: starting-iterate name
     ne: float = 0.0                 # sp2: target trace (occupation)
     iters: int = 0                  # sp2: iteration count
@@ -80,6 +81,12 @@ class Request:
     def multiply(cls, a: str, b: str) -> "Request":
         """``C = A B`` over two registered matrices."""
         return cls(kind="multiply", a=a, b=b)
+
+    @classmethod
+    def congruence(cls, z: str, f: str) -> "Request":
+        """``F_perp = Z^T F Z`` — the solver suite's basis change
+        (:mod:`repro.solvers.scf`), served as one two-multiply unit."""
+        return cls(kind="congruence", a=z, b=f)
 
     @classmethod
     def sp2(cls, x0: str, ne: float, iters: int) -> "Request":
@@ -134,6 +141,7 @@ class ServeConfig:
     shared_cache_cap: int = 128     # struct keys kept by the shared cache
     plan_cache_cap: int = 64        # per-session Session plan-cache bound
     trace: Any = False              # bool or a shared Tracer instance
+    prewarm: bool = False           # compile plan replicas at register()
 
 
 class PlanServer:
@@ -165,7 +173,8 @@ class PlanServer:
         self._busy: set = set()                 # id(plan) in use this batch
         self._fresh: list = []                  # (ticket, plan) compiled now
         self.counters = {"accepted": 0, "rejected": 0, "completed": 0,
-                         "failed": 0, "batches": 0, "units": 0}
+                         "failed": 0, "batches": 0, "units": 0,
+                         "cold_compiles": 0}
 
     # -- registration ---------------------------------------------------------
     def register(self, name: str, array: np.ndarray) -> None:
@@ -181,6 +190,28 @@ class PlanServer:
         self._matrices[name] = a
         for si, sess in enumerate(self.sessions):
             self._templates[(si, name)] = sess.from_dense(a, name=name)
+        if self.config.prewarm:
+            self._prewarm(name)
+
+    def _prewarm(self, name: str) -> None:
+        """Compile (and pay the deferred lowering of) one replica of the
+        iterate shapes — ``sq`` (X X) and ``pol`` (2X − X²) — per pooled
+        session, so the first SP2 request hits a warm replica everywhere.
+
+        Lowering happens on a plan's *first run*, so prewarming executes
+        each replica once against the registered values; the serving path
+        then replays with zero task registrations and zero cold compiles
+        (``counters["cold_compiles"]``).
+        """
+        a = self._matrices[name]
+        for si in range(len(self.sessions)):
+            for kind, ops in (("sq", [(name, a)]),
+                              ("pol", [(name, a), (name + ".y", a)])):
+                out = self._build_expr(si, kind, ops)
+                plan = self.sessions[si].compile(out)
+                if plan.nodes is None:
+                    plan._run({})
+                self.cache.register(plan)
 
     def _template(self, si: int, name: str, like: np.ndarray):
         """The (session, name) template, built from ``like`` on first use."""
@@ -193,10 +224,11 @@ class PlanServer:
     # -- admission ------------------------------------------------------------
     def submit(self, request: Request) -> Ticket:
         """Queue a request; returns its :class:`Ticket` or rejects."""
-        names = ((request.a, request.b) if request.kind == "multiply"
+        names = ((request.a, request.b)
+                 if request.kind in ("multiply", "congruence")
                  else (request.x0,))
         try:
-            if request.kind == "multiply":
+            if request.kind in ("multiply", "congruence"):
                 pass
             elif request.kind == "sp2":
                 if request.iters < 1:
@@ -291,7 +323,7 @@ class PlanServer:
 
     # -- unit state machines --------------------------------------------------
     def _init_state(self, req: Request) -> dict:
-        if req.kind == "multiply":
+        if req.kind in ("multiply", "congruence"):
             return {}
         return {"x": self._matrices[req.x0], "it": 0, "phase": "sq",
                 "y": None}
@@ -305,10 +337,11 @@ class PlanServer:
         state, so two requests can never share one within a batch).
         """
         req, state = t.request, self._states[t.id]
-        if req.kind == "multiply":
+        if req.kind in ("multiply", "congruence"):
             ops = self._distinct_ops([(req.a, self._matrices[req.a]),
                                       (req.b, self._matrices[req.b])])
-            plan = self._acquire(t, "mm", ops)
+            plan = self._acquire(
+                t, "mm" if req.kind == "multiply" else "cong", ops)
         elif state["phase"] == "sq":
             ops = [(req.x0, state["x"])]
             plan = self._acquire(t, "sq", ops)
@@ -326,7 +359,7 @@ class PlanServer:
 
     def _advance(self, t: Ticket, dense: np.ndarray) -> None:
         req, state = t.request, self._states[t.id]
-        if req.kind == "multiply":
+        if req.kind in ("multiply", "congruence"):
             return self._complete(t, dense)
         if state["phase"] == "sq":
             state["y"] = dense
@@ -399,6 +432,8 @@ class PlanServer:
             return ms[0] @ ms[-1]           # ms[-1]: A @ A dedups to one op
         if kind == "sq":
             return ms[0] @ ms[0]
+        if kind == "cong":
+            return (ms[0].T @ ms[-1]) @ ms[0]   # Z^T F Z (Z == F dedups)
         return 2.0 * ms[0] - ms[1]          # pol: 2X − X²
 
     def _acquire(self, t: Ticket, kind: str, ops: list):
@@ -431,6 +466,7 @@ class PlanServer:
         self._busy.add(id(plan))
         t.cache_misses += 1
         if plan.nodes is None:          # genuinely new: lowering pending
+            self.counters["cold_compiles"] += 1
             self._fresh.append((t, plan))
         return plan
 

@@ -428,3 +428,63 @@ class TestServeObservability:
         assert t2.cache_hits == 1 and t2.compile_s == 0
         assert t1.latency_s > 0 and t2.latency_s > 0
         assert t2.replay_s and t1.batches == t2.batches == 1
+
+
+class TestSolverServing:
+    """PR 10 satellites: congruence requests and replica pre-warming."""
+
+    @pytest.mark.parametrize("engine", ["numpy", "pallas"])
+    def test_congruence_request(self, engine):
+        n = 32
+        rng = np.random.default_rng(7)
+        z = np.triu(0.1 * rng.standard_normal((n, n)) + np.eye(n))
+        f = rng.standard_normal((n, n))
+        f = (f + f.T) / 2
+        srv = _server(engine=engine)
+        srv.register("Z", z)
+        srv.register("F", f)
+        t = srv.submit(Request.congruence("Z", "F"))
+        srv.drain()
+        assert t.done, t.error
+        np.testing.assert_allclose(t.result, z.T @ f @ z, **TOL)
+
+    def test_congruence_unknown_matrix_rejected(self):
+        srv = _server()
+        with pytest.raises(AdmissionError) as ei:
+            srv.submit(Request.congruence("Z", "F"))
+        assert ei.value.reason == "unknown_matrix"
+
+    @pytest.mark.parametrize("engine", ["numpy", "pallas"])
+    def test_prewarm_zero_cold_compiles(self, engine):
+        """With prewarm=True, registration compiles one replica of the
+        iterate shapes per pooled session: SP2 traffic then never pays a
+        cold compile, on any session the batch loop picks."""
+        x0 = _x0()
+        warm = _server(engine=engine, prewarm=True)
+        warm.register("X", x0)
+        tickets = [warm.submit(Request.sp2("X", ne=16.0, iters=3))
+                   for _ in range(3)]
+        warm.drain()
+        assert all(t.done for t in tickets)
+        assert warm.counters["cold_compiles"] == 0
+        assert all(t.compile_s == 0.0 for t in tickets)
+        # the same traffic on a cold server pays at least one compile
+        cold = _server(engine=engine, prewarm=False)
+        cold.register("X", x0)
+        t = cold.submit(Request.sp2("X", ne=16.0, iters=3))
+        cold.drain()
+        assert t.done, t.error
+        assert cold.counters["cold_compiles"] >= 1
+
+    def test_prewarm_matches_cold_results(self):
+        x0 = _x0()
+        results = []
+        for pw in (False, True):
+            srv = _server(engine="numpy", prewarm=pw, n_sessions=1,
+                          max_inflight=1)
+            srv.register("X", x0)
+            t = srv.submit(Request.sp2("X", ne=12.0, iters=4))
+            srv.drain()
+            assert t.done, t.error
+            results.append(t.result)
+        np.testing.assert_allclose(results[0], results[1], atol=0, rtol=0)

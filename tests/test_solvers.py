@@ -1,0 +1,371 @@
+"""Electronic-structure solver suite (src/repro/solvers, DESIGN.md §11).
+
+Pins the solver tentpole end to end:
+
+1. **Triangular task programs** — ``qt_inv_chol`` / ``qt_tri_solve`` /
+   ``qt_extract`` match dense references on both engines, produce
+   genuinely triangular quadtrees, and reject singular input.
+2. **Inverse factorization** — every method's Z satisfies
+   ``||Z^T S Z - I||_F`` at the *reported* residual on banded / S2 /
+   random-decay SPD patterns (both engines); localized refinement
+   touches fewer multiply subtrees than global refinement.
+3. **Accuracy-scaled chains** — the measured chain error never exceeds
+   the accumulated TruncationReport bound, and flops are monotone in the
+   target accuracy.
+4. **SCF pipeline** — the density matrix matches the dense
+   eigendecomposition reference; unchanged-structure SP2 replays
+   register zero new tasks; drifting-sparsity rebinds (denser *and*
+   sparser) run through ``recompile=True`` with successor reuse visible
+   in ``Session.metrics()`` ("plan-recompile").
+"""
+import math
+
+import numpy as np
+import pytest
+
+from repro import Session
+from repro.core.patterns import (banded_mask, divide_space_order,
+                                 overlap_mask, particle_cloud, random_mask,
+                                 values_for_mask)
+from repro.solvers import (TauPolicy, inverse_factor, multiply_chain,
+                           scf_density)
+
+N, LEAF_N, BS = 64, 16, 4
+TOL = dict(atol=2e-4, rtol=2e-4)   # pallas packs float32; numpy is float64
+ENGINES = ("numpy", "pallas")
+PATTERNS = ("banded", "s2", "random")
+
+
+def _session(engine="numpy", **kw):
+    kw.setdefault("leaf_n", LEAF_N)
+    kw.setdefault("bs", BS)
+    return Session(engine=engine, **kw)
+
+
+def _spd(pattern: str, n: int = N, seed: int = 0) -> np.ndarray:
+    """Diagonally dominant SPD matrix with the named sparsity/decay."""
+    rng = np.random.default_rng(seed)
+    if pattern == "banded":
+        dist = np.abs(np.subtract.outer(np.arange(n), np.arange(n)))
+        a = values_for_mask(banded_mask(n, 8), seed=seed) * 0.5 ** dist
+    elif pattern == "s2":
+        coords = particle_cloud(4, 3, seed=seed)       # 64 particles
+        order = divide_space_order(coords)
+        mask = overlap_mask(coords, 14.0, order=order)
+        pts = coords[order]
+        dist = np.sqrt(((pts[:, None, :] - pts[None, :, :]) ** 2).sum(-1))
+        a = np.zeros((n, n))
+        m = len(coords)
+        a[:m, :m] = values_for_mask(mask, seed=seed + 1) * np.exp(-0.7 * dist)
+    else:                                              # random decay
+        a = values_for_mask(random_mask(n, 0.15, seed=seed), seed=seed + 1)
+        a *= 10.0 ** (-4.0 * rng.random((n, n)))
+    a = (a + a.T) / 2.0
+    # scale off-diagonal mass below the unit diagonal: strictly
+    # diagonally dominant => SPD, conditioning independent of the draw
+    off = np.abs(a).sum(axis=1) - np.abs(np.diag(a))
+    a *= 0.45 / max(off.max(), 1e-12)
+    np.fill_diagonal(a, 1.0)
+    return a
+
+
+def _chain_factors(k: int = 4, seed: int = 3) -> list:
+    """Near-identity decayed factors (keeps chain norms O(1))."""
+    rng = np.random.default_rng(seed)
+    idx = np.arange(N)
+    decay = np.exp(-0.6 * np.abs(idx[:, None] - idx[None, :]))
+    return [np.eye(N) + 0.25 * decay * rng.standard_normal((N, N))
+            for _ in range(k)]
+
+
+# ---------------------------------------------------------------- core ops
+class TestTriangularPrograms:
+    @pytest.mark.parametrize("engine", ENGINES)
+    def test_inv_chol_matches_dense(self, engine):
+        s = _spd("banded")
+        sess = _session(engine)
+        Z = sess.from_dense(s, upper=True).inv_chol()
+        zd = Z.to_dense()
+        # unique inverse Cholesky factor: inv of the upper chol factor
+        ref = np.linalg.solve(np.linalg.cholesky(s).T, np.eye(N))
+        np.testing.assert_allclose(zd, ref, **TOL)
+        assert np.allclose(np.tril(zd, -1), 0.0), "Z not upper triangular"
+        np.testing.assert_allclose(zd.T @ s @ zd, np.eye(N), **TOL)
+
+    @pytest.mark.parametrize("engine", ENGINES)
+    def test_tri_solve_matches_dense(self, engine):
+        s = _spd("banded")
+        r = np.linalg.cholesky(s).T
+        b = np.random.default_rng(5).standard_normal((N, N)) * 0.3
+        sess = _session(engine)
+        X = sess.from_dense(r).tri_solve(sess.from_dense(b))
+        np.testing.assert_allclose(X.to_dense(), np.linalg.solve(r, b),
+                                   **TOL)
+
+    def test_engine_parity_task_structure(self):
+        """Both engines register the identical solve-program graph."""
+        s = _spd("banded")
+        counts = {}
+        for engine in ENGINES:
+            sess = _session(engine)
+            Z = sess.from_dense(s, upper=True).inv_chol()
+            Z.to_dense()
+            counts[engine] = (sess.task_counts(), Z.nnz_blocks())
+        assert counts["numpy"] == counts["pallas"]
+
+    @pytest.mark.parametrize("engine", ENGINES)
+    def test_principal_submatrix(self, engine):
+        s = _spd("banded")
+        sess = _session(engine)
+        S = sess.from_dense(s, upper=True)
+        half = N // 2
+        np.testing.assert_allclose(
+            S.principal_submatrix([0]).to_dense(), s[:half, :half], **TOL)
+        np.testing.assert_allclose(
+            S.principal_submatrix([3, 0]).to_dense(),
+            s[half:half + N // 4, half:half + N // 4], **TOL)
+
+    def test_principal_submatrix_rejects_off_diagonal_of_upper(self):
+        sess = _session()
+        S = sess.from_dense(_spd("banded"), upper=True)
+        with pytest.raises(ValueError, match="diagonal"):
+            S.principal_submatrix([1])
+
+    def test_extract_shares_subtree_chunks(self):
+        """Extraction is an alias: no leaf task is re-registered."""
+        sess = _session()
+        S = sess.from_dense(_spd("banded"), upper=True)
+        before = sess.task_counts()
+        S.principal_submatrix([0])
+        after = sess.task_counts()
+        assert after.get("leaf", 0) == before.get("leaf", 0)
+        assert after.get("extract", 0) == before.get("extract", 0) + 1
+
+    def test_singular_raises(self):
+        sess = _session()
+        z = sess.zeros(N, upper=True)
+        with pytest.raises(ValueError, match="singular|positive definite"):
+            z.inv_chol()
+        r = sess.zeros(N)
+        b = sess.from_dense(np.eye(N))
+        with pytest.raises(ValueError, match="singular"):
+            r.tri_solve(b)
+
+    def test_operand_storage_checks(self):
+        sess = _session()
+        plain = sess.from_dense(_spd("banded"))
+        upper = sess.from_dense(_spd("banded"), upper=True)
+        with pytest.raises(ValueError, match="upper storage"):
+            plain.inv_chol()
+        with pytest.raises(ValueError, match="plain"):
+            upper.tri_solve(plain)
+
+
+# ------------------------------------------------------- inverse factor
+class TestInverseFactor:
+    @pytest.mark.parametrize("engine", ENGINES)
+    @pytest.mark.parametrize("pattern", PATTERNS)
+    def test_recursive_matches_dense(self, engine, pattern):
+        s = _spd(pattern)
+        sess = _session(engine)
+        Z, rep = inverse_factor(sess.from_dense(s, upper=True))
+        zd = Z.to_dense()
+        measured = np.linalg.norm(zd.T @ s @ zd - np.eye(N))
+        # the reported residual is itself a quadtree readback: it must
+        # agree with the dense measurement up to engine arithmetic
+        assert abs(measured - rep.residual) <= 1e-4
+        assert measured <= 5e-5, f"{pattern}: residual {measured}"
+        ref = np.linalg.solve(np.linalg.cholesky(s).T, np.eye(N))
+        np.testing.assert_allclose(zd, ref, **TOL)
+
+    @pytest.mark.parametrize("engine", ENGINES)
+    def test_localized_converges_with_fewer_touched_subtrees(self, engine):
+        s = _spd("banded")
+        tol = 1e-4
+        sess_l = _session(engine)
+        Z_l, rep_l = inverse_factor(sess_l.from_dense(s, upper=True),
+                                    method="localized", tol=tol, tau=1e-7)
+        sess_g = _session(engine)
+        Z_g, rep_g = inverse_factor(sess_g.from_dense(s, upper=True),
+                                    method="global", tol=tol)
+        assert rep_l.converged and rep_g.converged
+        assert rep_l.residual <= 2 * tol and rep_g.residual <= 2 * tol
+        assert rep_l.splits >= 1
+        assert rep_l.multiply_tasks < rep_g.multiply_tasks, (
+            f"localized touched {rep_l.multiply_tasks} multiply subtrees, "
+            f"global {rep_g.multiply_tasks}")
+
+    def test_report_fields_and_schema(self):
+        sess = _session()
+        _, rep = inverse_factor(
+            sess.from_dense(_spd("banded"), upper=True),
+            method="global", tol=1e-6)
+        assert rep.iterations >= 1
+        assert rep.residuals and rep.residuals[-1] <= 1e-6
+        # refinement residuals contract monotonically (order-2 iteration)
+        assert all(b <= a * 1.01 for a, b in
+                   zip(rep.residuals, rep.residuals[1:]))
+        d = rep.to_dict()
+        assert d["schema"] == 1 and d["method"] == "global"
+        assert d["flops"] > 0 and d["multiply_tasks"] > 0
+
+    def test_validation(self):
+        sess = _session()
+        with pytest.raises(ValueError, match="upper"):
+            inverse_factor(sess.from_dense(_spd("banded")))
+        with pytest.raises(ValueError, match="method"):
+            inverse_factor(sess.from_dense(_spd("banded"), upper=True),
+                           method="qr")
+
+
+# ---------------------------------------------------------------- chains
+class TestMultiplyChain:
+    @pytest.mark.parametrize("engine", ENGINES)
+    def test_error_le_accumulated_bound(self, engine):
+        mats = _chain_factors()
+        exact = mats[0]
+        for a in mats[1:]:
+            exact = exact @ a
+        sess = _session(engine)
+        ms = [sess.from_dense(a) for a in mats]
+        P, rep = multiply_chain(ms, policy=TauPolicy(target=1e-2))
+        err = np.linalg.norm(P.to_dense() - exact)
+        # float32 packing adds engine arithmetic on top of truncation
+        slack = 1e-3 if engine == "pallas" else 1e-9
+        assert err <= rep.accumulated_bound + slack
+        assert rep.accumulated_bound <= 1e-2
+        assert len(rep.taus) == len(mats) - 1 == rep.steps
+        assert all(t > 0.0 for t in rep.taus)
+
+    def test_flops_monotone_in_target_accuracy(self):
+        mats = _chain_factors()
+        flops, bounds = [], []
+        for target in (1e-1, 1e-3, 1e-5, 0.0):
+            sess = _session()
+            ms = [sess.from_dense(a) for a in mats]
+            policy = TauPolicy(target=target) if target else None
+            _, rep = multiply_chain(ms, policy=policy)
+            flops.append(rep.flops)
+            bounds.append(rep.accumulated_bound)
+        # tighter target => less pruning => more executed flops
+        assert all(a <= b for a, b in zip(flops, flops[1:])), flops
+        assert all(b >= a for a, b in zip(bounds[1:], bounds[:-1])), bounds
+        assert bounds[-1] == 0.0            # exact chain: nothing pruned
+
+    def test_budget_feedback_adapts(self):
+        """Measured step bounds feed back: committed error never exceeds
+        the target even though the policy only estimates prune counts."""
+        mats = _chain_factors(k=6, seed=9)
+        sess = _session()
+        ms = [sess.from_dense(a) for a in mats]
+        _, rep = multiply_chain(ms, policy=TauPolicy(target=1e-4))
+        assert rep.accumulated_bound <= 1e-4
+
+    def test_validation(self):
+        sess = _session()
+        a = sess.from_dense(_chain_factors()[0])
+        with pytest.raises(ValueError, match="two"):
+            multiply_chain([a])
+        with pytest.raises(ValueError, match="plain"):
+            multiply_chain([a, sess.from_dense(_spd("banded"), upper=True)])
+        with pytest.raises(ValueError, match="target"):
+            TauPolicy(target=-1.0)
+        with pytest.raises(ValueError, match="safety"):
+            TauPolicy(target=1.0, safety=0.5)
+
+
+# ------------------------------------------------------------------- scf
+class TestSCF:
+    def _fock(self, seed=11):
+        rng = np.random.default_rng(seed)
+        idx = np.arange(N)
+        f = -np.exp(-0.4 * np.abs(np.subtract.outer(idx, idx)))
+        f += 0.05 * rng.standard_normal((N, N))
+        return (f + f.T) / 2.0
+
+    def _reference(self, f, s, n_occ):
+        z = np.linalg.solve(np.linalg.cholesky(s).T, np.eye(N))
+        w, v = np.linalg.eigh(z.T @ f @ z)
+        c = v[:, :n_occ]
+        return z @ (c @ c.T) @ z.T
+
+    @pytest.mark.parametrize("engine", ENGINES)
+    def test_density_matches_dense_reference(self, engine):
+        f, s = self._fock(), _spd("banded")
+        n_occ = N // 2
+        sess = _session(engine, lazy=True)
+        D, rep = scf_density(sess, f, s, n_occ, tol=1e-6)
+        assert rep.converged
+        assert abs(rep.occupation - n_occ) <= 1e-3
+        assert rep.factor.residual <= 1e-4
+        np.testing.assert_allclose(D.to_dense(),
+                                   self._reference(f, s, n_occ),
+                                   atol=5e-3, rtol=5e-3)
+
+    def test_unchanged_structure_replays_zero_tasks(self):
+        f, s = self._fock(), _spd("banded")
+        sess = _session(lazy=True)
+        _, rep = scf_density(sess, f, s, N // 2, tol=1e-6)
+        assert rep.sp2_iterations > 2
+        assert rep.replay_tasks == 0, (
+            "structure-preserving SP2 replays registered "
+            f"{rep.replay_tasks} new tasks")
+        assert rep.recompile_misses == 0 and rep.recompile_hits == 0
+
+    @pytest.mark.parametrize("engine", ENGINES)
+    def test_drifting_structure_recompiles_with_successor_reuse(
+            self, engine):
+        """Denser and sparser rebinds both route through recompile=True;
+        repeated structures hit the successor cache (metrics source
+        "plan-recompile")."""
+        base = values_for_mask(banded_mask(N, 10), seed=1) * 0.1
+        rng = np.random.default_rng(2)
+        denser = base + 0.05 * rng.standard_normal((N, N))   # full support
+        sparser = values_for_mask(random_mask(N, 0.04, seed=3), seed=4) * 0.1
+        sess = _session(engine, lazy=True)
+        X = sess.from_dense(base, name="X")
+        plan = sess.compile(X @ X)
+        np.testing.assert_allclose(plan.run().to_dense(), base @ base, **TOL)
+        # sparser first: once a full-support successor exists it absorbs
+        # every subset-support rebind, which would mask the sparser miss
+        for x in (sparser, denser, sparser * 2.0, denser * 0.5):
+            out = plan.run(X=x, recompile=True).to_dense()
+            np.testing.assert_allclose(out, x @ x, **TOL)
+        ms = {m.source: m for m in sess.metrics()}
+        assert "plan-recompile" in ms, "drift never surfaced in metrics"
+        got = {c.name: c.total for c in ms["plan-recompile"]}
+        # two fresh structures compiled once each, then reused once each
+        assert got["plan_recompile_misses"] == 2
+        assert got["plan_recompile_hits"] == 2
+
+    def test_sp2_drift_via_filter_tol(self):
+        """A full SCF with inter-iteration thresholding drifts structure
+        (fill-in grows past the sparse compile, then stabilizes into
+        successor hits) and still converges to the reference density."""
+        # decay-only Fock: dense noise would defeat the threshold
+        idx = np.arange(N)
+        f = -np.exp(-0.4 * np.abs(np.subtract.outer(idx, idx)))
+        f = (f + f.T) / 2.0
+        s = _spd("banded")
+        n_occ = N // 2
+        sess = _session(lazy=True)
+        D, rep = scf_density(sess, f, s, n_occ, tol=1e-6, filter_tol=1e-7)
+        assert rep.converged
+        assert rep.recompile_misses >= 1, "thresholding never drifted"
+        assert rep.recompile_hits >= 1, "no successor was ever reused"
+        np.testing.assert_allclose(D.to_dense(),
+                                   self._reference(f, s, n_occ),
+                                   atol=5e-3, rtol=5e-3)
+
+    def test_requires_lazy_session(self):
+        with pytest.raises(ValueError, match="lazy"):
+            scf_density(_session(), self._fock(), _spd("banded"), N // 2)
+
+    def test_report_schema(self):
+        f, s = self._fock(), _spd("banded")
+        sess = _session(lazy=True)
+        _, rep = scf_density(sess, f, s, N // 2, tol=1e-5)
+        d = rep.to_dict()
+        assert d["schema"] == 1
+        assert d["factor"]["schema"] == 1
+        assert len(d["traces"]) == rep.sp2_iterations + 1
